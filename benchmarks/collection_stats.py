@@ -1,0 +1,51 @@
+"""Paper Table 1: collection statistics at various numbers of documents.
+
+Synthetic Zipf collection with WT10G-like shape; distinct-pair counts and
+output sizes computed EXACTLY by the counting pipeline (StatsSink — no
+approximation, same as the paper)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core.cooc import count
+from repro.core.types import StatsSink
+from repro.data.corpus import collection_stats, synthetic_zipf_collection
+from repro.data.preprocess import remap_df_descending
+
+SCALES = (100, 300, 1000, 3000)
+VOCAB = 30_000
+MEAN_LEN = 60
+
+
+def build(n_docs: int):
+    c = synthetic_zipf_collection(
+        max(SCALES), vocab=VOCAB, mean_len=MEAN_LEN, seed=0
+    ).head(n_docs)
+    return c
+
+
+def run() -> list[str]:
+    rows = []
+    full = synthetic_zipf_collection(max(SCALES), vocab=VOCAB, mean_len=MEAN_LEN, seed=0)
+    for n in SCALES:
+        c = full.head(n)
+        s = collection_stats(c)
+        cd, _ = remap_df_descending(c)
+        sink = StatsSink()
+        _, secs = time_call(
+            lambda: count("freq-split", cd, sink, head=512, use_kernel=False)
+        )
+        derived = (
+            f"docs={s['num_docs']};avg_len={s['avg_doc_len']:.1f};"
+            f"max_len={s['max_doc_len']};postings={s['num_postings']};"
+            f"vocab={s['vocab_observed']};distinct_pairs={sink.distinct_pairs};"
+            f"output_bytes={sink.output_bytes}"
+        )
+        rows.append(row(f"table1/docs_{n}", secs * 1e6, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

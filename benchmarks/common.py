@@ -1,0 +1,21 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+
+def time_call(fn, *args, repeats: int = 1, **kwargs):
+    """Returns (result, seconds_per_call) — median of ``repeats``."""
+    times = []
+    result = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn(*args, **kwargs)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return result, times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks: co-occurrence Gram, bitpair popcount, segment
+histogram. On CPU the jnp oracle path is timed (the Pallas path is
+interpret-mode on CPU — correctness only); derived column reports the
+achieved GFLOP/s / GB/s against the op's analytic work."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def run() -> list[str]:
+    rows = []
+    # --- gram: (D, M)ᵀ(D, N)
+    D, M, N = 4096, 512, 512
+    bi = jnp.asarray((RNG.random((D, M)) < 0.05).astype(np.float32))
+    f = jax.jit(ref.cooc_gram_ref)
+    f(bi, bi).block_until_ready()
+    _, secs = time_call(lambda: f(bi, bi).block_until_ready(), repeats=5)
+    rows.append(row("kernel/cooc_gram_4096x512", secs * 1e6,
+                    f"gflops={2*D*M*N/secs/1e9:.1f}"))
+    # --- bitpair: (M, W) uint32 popcount
+    Mb, W = 512, 2048
+    bits = jnp.asarray(RNG.integers(0, 2**32, size=(Mb, W), dtype=np.uint32))
+    g = jax.jit(ref.bitpair_popcount_ref)
+    g(bits, bits).block_until_ready()
+    _, secs = time_call(lambda: g(bits, bits).block_until_ready(), repeats=5)
+    pair_ops = Mb * Mb * W
+    rows.append(row("kernel/bitpair_512x2048", secs * 1e6,
+                    f"gword_ands={pair_ops/secs/1e9:.2f};docs_per_word=32"))
+    # --- segment hist
+    L, R, V = 1 << 20, 64, 8192
+    ids = jnp.asarray(RNG.integers(0, V, size=L).astype(np.int32))
+    seg = jnp.asarray(RNG.integers(0, R, size=L).astype(np.int32))
+    h = jax.jit(lambda i, s: ref.segment_hist_ref(i, s, R, V))
+    h(ids, seg).block_until_ready()
+    _, secs = time_call(lambda: h(ids, seg).block_until_ready(), repeats=5)
+    rows.append(row("kernel/segment_hist_1M", secs * 1e6,
+                    f"gupdates={L/secs/1e9:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,73 @@
+"""Paper Figure 2: memory usage of co-occurrence count methods.
+
+Each method runs in a fresh subprocess; tracemalloc peak (tracks numpy
+buffers and the NAÏVE pair dictionary) is the measure — the analogue of the
+paper's Figure-2 process counters, minus the interpreter/jax import floor.
+Reproduces the ordering: NAÏVE most memory-hungry (pair dictionary),
+scan/block methods bounded by the collection + one accumulator strip."""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import row
+
+SCALES = (300, 1000)
+VOCAB = 30_000
+
+_CHILD = textwrap.dedent(
+    """
+    import json, resource, sys, tracemalloc
+    sys.path.insert(0, "src")
+    from repro.core.cooc import count
+    from repro.core.types import StatsSink
+    from repro.data.corpus import synthetic_zipf_collection
+    from repro.data.preprocess import remap_df_descending
+
+    method, n = sys.argv[1], int(sys.argv[2])
+    c = synthetic_zipf_collection(n, vocab={vocab}, mean_len=60, seed=1)
+    if method == "freq-split":
+        c, _ = remap_df_descending(c)
+    kwargs = dict(flush_pairs=2_000_000) if method == "naive" else (
+        dict(head=512, use_kernel=False) if method == "freq-split" else {{}})
+    tracemalloc.start()
+    count(method, c, StatsSink(), **kwargs)
+    cur, peak = tracemalloc.get_traced_memory()
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    print(json.dumps(dict(peak_kb=peak // 1024, rss_kb=rss)))
+    """
+).format(vocab=VOCAB)
+
+METHODS = ["naive", "list-pairs", "list-blocks", "list-scan", "multi-scan", "freq-split"]
+MAX_SCALE = {"naive": 300, "list-pairs": 300}
+
+
+def run() -> list[str]:
+    rows = []
+    for n in SCALES:
+        for method in METHODS:
+            if n > MAX_SCALE.get(method, 10**9):
+                continue
+            res = subprocess.run(
+                [sys.executable, "-c", _CHILD, method, str(n)],
+                capture_output=True, text=True, timeout=900,
+            )
+            if res.returncode != 0:
+                rows.append(row(f"fig2/{method}/docs_{n}", 0, "FAILED"))
+                continue
+            data = json.loads(res.stdout.strip().splitlines()[-1])
+            rows.append(
+                row(
+                    f"fig2/{method}/docs_{n}",
+                    0.0,
+                    f"method_peak_mb={data['peak_kb']/1024:.1f}",
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,107 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun.jsonl /
+hillclimb.jsonl. Not part of `benchmarks.run` (no timing) — a report tool:
+
+    PYTHONPATH=src python -m benchmarks.roofline_table experiments/dryrun.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _fmt_t(sec: float) -> str:
+    if sec >= 1.0:
+        return f"{sec:.2f}s"
+    if sec >= 1e-3:
+        return f"{sec*1e3:.1f}ms"
+    return f"{sec*1e6:.0f}µs"
+
+
+def load(path: str) -> list[dict]:
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"], r.get("variant", ""))
+            recs[key] = r  # last record wins (re-runs supersede)
+    return list(recs.values())
+
+
+def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
+    rows = [
+        "| arch | shape | kind | t_compute | t_mem (raw→fused) | t_coll | bound "
+        "| MODEL_FLOPS | useful | MFU-bound | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        if not r.get("ok") or r["mesh"] != mesh or r.get("variant"):
+            continue
+        ro = r["roofline"]
+        an = r.get("analytic", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {_fmt_t(ro['t_compute_s'])} "
+            f"| {_fmt_t(ro['t_memory_s'])}→{_fmt_t(ro.get('t_memory_fused_s', 0))} "
+            f"| {_fmt_t(ro['t_collective_s'])} | {ro['bottleneck']} "
+            f"| {ro['model_flops']:.2e} | {ro['useful_flops_ratio']:.2f} "
+            f"| {ro['mfu_bound']*100:.1f}% "
+            f"| {'✓' if an.get('fits_16gb') else '✗'} "
+            f"({an.get('args_gb_per_chip', 0) + an.get('act_gb_per_chip', 0):.1f}GB) |"
+        )
+    return "\n".join(rows)
+
+
+def multipod_table(recs: list[dict]) -> str:
+    """Single-pod vs multi-pod compile evidence per cell."""
+    by_cell: dict = {}
+    for r in recs:
+        if r.get("variant"):
+            continue
+        by_cell.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = r
+    rows = [
+        "| arch | shape | 16×16 | 2×16×16 | pod-axis collectives (multi-pod) |",
+        "|---|---|---|---|---|",
+    ]
+    for (arch, shape), m in sorted(by_cell.items()):
+        s, d = m.get("16x16"), m.get("2x16x16")
+        coll = ""
+        if d and d.get("ok"):
+            cb = d["roofline"]["coll_breakdown"]
+            coll = ", ".join(f"{k.split('-')[-1]}={v/2**30:.1f}GiB" for k, v in cb.items() if v > 0)
+        rows.append(
+            f"| {arch} | {shape} "
+            f"| {'✓' if s and s.get('ok') else '✗'} "
+            f"| {'✓' if d and d.get('ok') else '✗'} | {coll} |"
+        )
+    return "\n".join(rows)
+
+
+def hillclimb_table(recs: list[dict]) -> str:
+    rows = [
+        "| experiment | variant | t_compute | t_mem_fused | t_coll | bound | MFU-bound |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok") or not r.get("variant"):
+            continue
+        ro = r["roofline"]
+        rows.append(
+            f"| {r.get('experiment','')} | {r['variant']} "
+            f"| {_fmt_t(ro['t_compute_s'])} | {_fmt_t(ro.get('t_memory_fused_s', 0))} "
+            f"| {_fmt_t(ro['t_collective_s'])} | {ro['bottleneck']} "
+            f"| {ro['mfu_bound']*100:.1f}% |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun.jsonl"
+    recs = load(path)
+    if "hillclimb" in path:
+        print(hillclimb_table(recs))
+    else:
+        print("## Roofline (single pod, 16×16 = 256 chips)\n")
+        print(roofline_table(recs))
+        print("\n## Multi-pod dry-run (2×16×16 = 512 chips)\n")
+        print(multipod_table(recs))

@@ -1,0 +1,41 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   table1   — collection statistics at scale (paper Table 1)
+#   fig1     — method time comparison (paper Figure 1)
+#   fig2     — method memory comparison (paper Figure 2)  [subprocess RSS]
+#   scaling  — log-log slope fits (paper §3 asymptotics)
+#   kernel   — Pallas-kernel oracle micro-benchmarks
+#   throughput — docs/hour headline (paper §1/§4)
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        collection_stats,
+        kernels_bench,
+        methods_memory,
+        methods_time,
+        scaling,
+        throughput,
+    )
+
+    suites = {
+        "table1": collection_stats.run,
+        "fig1": methods_time.run,
+        "fig2": methods_memory.run,
+        "scaling": scaling.run,
+        "kernel": kernels_bench.run,
+        "throughput": throughput.run,
+    }
+    pick = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in pick:
+        for line in suites[name]():
+            print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper §3 asymptotics: fit log–log time-vs-docs slopes per method and
+verify the ranking the paper observed (LIST-BLOCKS / LIST-SCAN near-linear
+and fastest; LIST-PAIRS / MULTI-SCAN super-linear; NAÏVE slowest overall)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core.cooc import count
+from repro.core.types import StatsSink
+from repro.data.corpus import synthetic_zipf_collection
+
+SCALES = (100, 200, 400, 800)
+VOCAB = 30_000
+
+METHODS = ["naive", "list-pairs", "list-blocks", "list-scan", "multi-scan"]
+MAX_SCALE = {"naive": 800, "list-pairs": 200, "multi-scan": 400}
+
+
+def run() -> list[str]:
+    rows = []
+    full = synthetic_zipf_collection(max(SCALES), vocab=VOCAB, mean_len=60, seed=2)
+    times: dict[str, list] = {m: [] for m in METHODS}
+    for n in SCALES:
+        c = full.head(n)
+        for m in METHODS:
+            if n > MAX_SCALE.get(m, 10**9):
+                continue
+            kwargs = dict(flush_pairs=2_000_000) if m == "naive" else {}
+            _, secs = time_call(lambda: count(m, c, StatsSink(), **kwargs))
+            times[m].append((n, secs))
+    for m, pts in times.items():
+        if len(pts) < 2:
+            continue
+        xs = np.log([p[0] for p in pts])
+        ys = np.log([p[1] for p in pts])
+        slope = float(np.polyfit(xs, ys, 1)[0])
+        total_us = pts[-1][1] * 1e6
+        rows.append(
+            row(f"scaling/{m}", total_us, f"loglog_slope={slope:.2f};docs={pts[-1][0]}")
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,39 @@
+"""Paper §1/§4 headline: documents/hour of the best methods ("several
+hundred thousand documents per hour" for LIST-PAIRS→LIST-SCAN on 2012-era
+hardware; "perhaps a million documents per hour" projected)."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, time_call
+from repro.core.cooc import count
+from repro.core.types import StatsSink
+from repro.data.corpus import synthetic_zipf_collection
+from repro.data.preprocess import remap_df_descending
+
+N_DOCS = 2000
+VOCAB = 30_000
+
+
+def run() -> list[str]:
+    rows = []
+    c = synthetic_zipf_collection(N_DOCS, vocab=VOCAB, mean_len=60, seed=3)
+    cd, _ = remap_df_descending(c)
+    for method, coll, kwargs in [
+        ("list-scan", c, {}),
+        ("list-blocks", c, {}),
+        ("freq-split", cd, dict(head=512, use_kernel=False)),
+    ]:
+        sink = StatsSink()
+        _, secs = time_call(lambda: count(method, coll, sink, **kwargs))
+        rows.append(
+            row(
+                f"throughput/{method}",
+                secs * 1e6,
+                f"docs_per_hour={N_DOCS/secs*3600:.0f};pairs={sink.distinct_pairs}",
+            )
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

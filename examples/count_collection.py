@@ -1,0 +1,37 @@
+"""End-to-end driver (the paper's full pipeline at scale, fault-tolerant):
+corpus → preprocess → sharded exact counting with lease/straggler handling →
+checkpoint every few shards → kill-resume demonstration → paper-format
+output + throughput report.
+
+    PYTHONPATH=src python examples/count_collection.py [--docs 20000]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.cooc_run import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=20_000)
+    ap.add_argument("--vocab", type=int, default=4096)  # dense-merge regime
+    args = ap.parse_args()
+    result = run(
+        num_docs=args.docs,
+        vocab=args.vocab,
+        method="freq-split",
+        num_shards=16,
+        out_dir="/tmp/cooc_e2e",
+    )
+    print(
+        f"\nprocessed {result['num_docs']} docs in {result['elapsed_s']}s "
+        f"→ {result['docs_per_hour']:,} docs/hour "
+        f"(paper: 'several hundred thousand documents per hour')"
+    )
+
+
+if __name__ == "__main__":
+    main()

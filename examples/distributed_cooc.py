@@ -1,0 +1,54 @@
+"""Distributed Gram-matrix co-occurrence on a (data × model) device mesh —
+the multi-pod algorithm at toy scale (8 placeholder CPU devices), comparing
+the paper-faithful all-gather schedule with the beyond-paper ring schedule.
+
+    python examples/distributed_cooc.py     # sets XLA flags itself
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import gram_reference, make_distributed_gram
+from repro.data.corpus import synthetic_zipf_collection
+from repro.data.index import incidence_dense
+from repro.data.preprocess import remap_df_descending
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    c = synthetic_zipf_collection(512, vocab=256, mean_len=40, seed=0)
+    cd, _ = remap_df_descending(c)
+    B = jnp.asarray(incidence_dense(cd, 0, 512, 0, 256))  # (docs, vocab) 0/1
+
+    ref = np.asarray(gram_reference(B))
+    for sched in ["allgather", "ring"]:
+        fn = make_distributed_gram(mesh, schedule=sched)
+        out = np.asarray(fn(B))  # (V, V) rows fully accumulated
+        assert np.array_equal(out, ref), sched
+        t0 = time.time()
+        for _ in range(5):
+            fn(B).block_until_ready()
+        dt = (time.time() - t0) / 5
+        hlo = fn.lower(B).compile().as_text()
+        n_ag = hlo.count(" all-gather")
+        n_cp = hlo.count(" collective-permute")
+        print(
+            f"{sched:10s}: exact ✓  {dt*1e3:6.1f} ms/call  "
+            f"all-gathers={n_ag} collective-permutes={n_cp}"
+        )
+    print("C[i,j] == |docs containing both i and j| — distributed over 8 devices")
+
+
+if __name__ == "__main__":
+    main()

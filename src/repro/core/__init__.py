@@ -1,0 +1,22 @@
+"""Core: the paper's contribution — exact term co-occurrence counting.
+
+Five paper-faithful methods (naive, list-pairs, list-blocks, list-scan,
+multi-scan), their TPU adaptations (MXU Gram / bit-packed popcount /
+segment-sum), the beyond-paper FREQ-SPLIT hybrid, and the distributed
+(multi-pod) Gram accumulation.
+"""
+
+from repro.core.cooc import METHODS, count, dense_counts
+from repro.core.oracle import brute_force_counts
+from repro.core.types import DenseSink, FileSink, StatsSink, read_pair_file
+
+__all__ = [
+    "METHODS",
+    "count",
+    "dense_counts",
+    "brute_force_counts",
+    "DenseSink",
+    "FileSink",
+    "StatsSink",
+    "read_pair_file",
+]

@@ -1,0 +1,49 @@
+"""Method registry + single entry point for co-occurrence counting."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+from repro.core.hybrid import count_freq_split
+from repro.core.list_blocks import count_list_blocks, count_list_blocks_gram
+from repro.core.list_pairs import count_list_pairs, count_list_pairs_bitpacked
+from repro.core.list_scan import count_list_scan, count_list_scan_segment
+from repro.core.multi_scan import count_multi_scan, count_multi_scan_matmul
+from repro.core.naive import count_naive
+from repro.core.types import DenseSink, PairSink
+from repro.data.corpus import Collection
+
+# name -> counting callable(collection, sink, **kwargs) -> stats dict
+METHODS: dict[str, Callable] = {
+    # paper-faithful algorithms (§2)
+    "naive": count_naive,
+    "list-pairs": count_list_pairs,
+    "list-blocks": count_list_blocks,
+    "list-scan": count_list_scan,
+    "multi-scan": count_multi_scan,
+    # TPU adaptations (same traversal orders, MXU/VPU execution)
+    "list-pairs-bitpacked": count_list_pairs_bitpacked,
+    "list-blocks-gram": count_list_blocks_gram,
+    "list-scan-segment": count_list_scan_segment,
+    "multi-scan-matmul": count_multi_scan_matmul,
+    # beyond-paper hybrid
+    "freq-split": count_freq_split,
+}
+
+
+def count(method: str, c: Collection, sink: PairSink | None = None, **kwargs):
+    """Run ``method`` over collection ``c``. Returns (sink, stats)."""
+    if method not in METHODS:
+        raise KeyError(f"unknown method {method!r}; have {sorted(METHODS)}")
+    if sink is None:
+        sink = DenseSink(c.vocab_size)
+    stats = METHODS[method](c, sink, **kwargs)
+    return sink, stats
+
+
+def dense_counts(method: str, c: Collection, **kwargs) -> np.ndarray:
+    """Convenience for tests: dense strict-upper count matrix."""
+    sink, _ = count(method, c, DenseSink(c.vocab_size), **kwargs)
+    return sink.mat

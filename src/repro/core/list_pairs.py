@@ -1,0 +1,84 @@
+"""LIST-PAIRS (paper §2): pair-order posting-list intersection.
+
+Build the inverted index in a first pass, then consider every ordered term
+pair (i < j) and compute |postings(i) ∩ postings(j)|. Each pair is touched
+exactly once and needs a single scalar accumulator — but the approach is
+quadratic in vocabulary and almost all intersections are empty (the paper's
+stated disadvantage, visible in our Figure-1 benchmark).
+
+The TPU adaptation of this traversal is the bit-packed AND+popcount kernel
+(kernels/bitpair.py): 32 documents per uint32 word, intersection size =
+Σ popcount(w_i & w_j) — see count_list_pairs_bitpacked.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import PairSink
+from repro.data.corpus import Collection
+from repro.data.index import build_inverted_index, incidence_bitpacked
+
+
+def _intersect_size_sorted(a: np.ndarray, b: np.ndarray) -> int:
+    """|a ∩ b| for sorted unique int arrays (galloping-free linear merge)."""
+    return int(np.intersect1d(a, b, assume_unique=True).size)
+
+
+def count_list_pairs(c: Collection, sink: PairSink) -> dict:
+    inv = build_inverted_index(c)
+    V = c.vocab_size
+    df = inv.df()
+    live = np.nonzero(df)[0]
+    intersections = 0
+    for ii, i in enumerate(live):
+        pi = inv.postings(i)
+        sec, cnt = [], []
+        for j in live[ii + 1:]:
+            intersections += 1
+            n = _intersect_size_sorted(pi, inv.postings(j))
+            if n:
+                sec.append(j)
+                cnt.append(n)
+        if sec:
+            sink.emit_row(int(i), np.asarray(sec), np.asarray(cnt))
+    return {"intersections": intersections, "live_terms": int(len(live))}
+
+
+def count_list_pairs_bitpacked(
+    c: Collection, sink: PairSink, *, block: int = 256, use_kernel: bool = True
+) -> dict:
+    """TPU-adapted LIST-PAIRS: blocked bit-packed intersection counting.
+
+    Processes vocab blocks (I, J) with I <= J; each block pair is one
+    popcount-matmul over uint32 bitmaps (Pallas kernel on TPU; jnp oracle
+    otherwise). Still pair-order traversal — every pair computed exactly
+    once — but vectorized 32 docs/word and (block × block) pairs per call.
+    """
+    from repro.kernels import ops as kops
+
+    V = c.vocab_size
+    bits = incidence_bitpacked(c)  # (V, W) uint32
+    nblk = (V + block - 1) // block
+    block_pairs = 0
+    for bi in range(nblk):
+        ilo, ihi = bi * block, min((bi + 1) * block, V)
+        rows_i = bits[ilo:ihi]
+        for bj in range(bi, nblk):
+            jlo, jhi = bj * block, min((bj + 1) * block, V)
+            tile = np.asarray(
+                kops.bitpair_popcount(rows_i, bits[jlo:jhi], use_kernel=use_kernel)
+            ).astype(np.int64)
+            block_pairs += 1
+            _emit_tile(tile, ilo, jlo, sink)
+    return {"block_pairs": block_pairs, "bitmap_bytes": int(bits.nbytes)}
+
+
+def _emit_tile(tile: np.ndarray, row_lo: int, col_lo: int, sink: PairSink) -> None:
+    for r in range(tile.shape[0]):
+        primary = row_lo + r
+        row = tile[r]
+        nz = np.nonzero(row)[0]
+        nz = nz[nz + col_lo > primary]
+        if len(nz):
+            sink.emit_row(primary, nz + col_lo, row[nz])

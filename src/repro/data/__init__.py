@@ -1,0 +1,17 @@
+"""Data substrate: corpora, preprocessing, indexes, host pipeline, samplers."""
+
+from repro.data.corpus import Collection, synthetic_zipf_collection, collection_stats
+from repro.data.index import InvertedIndex, build_inverted_index, incidence_dense, incidence_bitpacked
+from repro.data.preprocess import preprocess_documents, remap_df_descending
+
+__all__ = [
+    "Collection",
+    "synthetic_zipf_collection",
+    "collection_stats",
+    "InvertedIndex",
+    "build_inverted_index",
+    "incidence_dense",
+    "incidence_bitpacked",
+    "preprocess_documents",
+    "remap_df_descending",
+]

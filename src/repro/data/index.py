@@ -1,0 +1,104 @@
+"""Indexes: the paper's two core structures.
+
+* Forward index — the Collection itself (CSR doc → sorted unique term IDs).
+* Inverted index — CSR term → ascending doc IDs (``build_inverted_index``).
+
+Plus the TPU-side representations of the incidence matrix B ∈ {0,1}^{D×V}:
+
+* ``incidence_dense``  — (D, V) 0/1 tile material for the MXU Gram kernel,
+* ``incidence_bitpacked`` — (V, ceil(D/32)) uint32 bitmap material for the
+  popcount intersection kernel (LIST-PAIRS adaptation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.data.corpus import Collection
+
+
+@dataclasses.dataclass(frozen=True)
+class InvertedIndex:
+    term_ptr: np.ndarray  # int64[V+1]
+    docs: np.ndarray      # int32[nnz] — ascending doc IDs per term
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.term_ptr) - 1
+
+    def postings(self, t: int) -> np.ndarray:
+        return self.docs[self.term_ptr[t]:self.term_ptr[t + 1]]
+
+    def df(self) -> np.ndarray:
+        return np.diff(self.term_ptr)
+
+
+def build_inverted_index(c: Collection) -> InvertedIndex:
+    """One pass over the forward index (the paper's "first pass").
+
+    Stable counting-sort by term ID keeps doc IDs ascending inside each
+    posting list (documents are visited in doc order).
+    """
+    df = np.bincount(c.terms, minlength=c.vocab_size).astype(np.int64)
+    term_ptr = np.zeros(c.vocab_size + 1, dtype=np.int64)
+    np.cumsum(df, out=term_ptr[1:])
+    doc_ids = np.repeat(
+        np.arange(c.num_docs, dtype=np.int32), np.diff(c.doc_ptr)
+    )
+    order = np.argsort(c.terms, kind="stable")
+    return InvertedIndex(term_ptr, doc_ids[order].astype(np.int32))
+
+
+def incidence_dense(
+    c: Collection,
+    doc_lo: int = 0,
+    doc_hi: int | None = None,
+    term_lo: int = 0,
+    term_hi: int | None = None,
+    dtype=np.float32,
+) -> np.ndarray:
+    """Materialize a (docs, terms) 0/1 tile of B. Host-side tile builder for
+    streaming the Gram kernel; never materializes all of B for big corpora."""
+    doc_hi = c.num_docs if doc_hi is None else doc_hi
+    term_hi = c.vocab_size if term_hi is None else term_hi
+    out = np.zeros((doc_hi - doc_lo, term_hi - term_lo), dtype=dtype)
+    for i, d in enumerate(range(doc_lo, doc_hi)):
+        ts = c.doc(d)
+        ts = ts[(ts >= term_lo) & (ts < term_hi)]
+        out[i, ts - term_lo] = 1
+    return out
+
+
+def incidence_bitpacked(
+    c: Collection,
+    term_lo: int = 0,
+    term_hi: int | None = None,
+) -> np.ndarray:
+    """(terms, ceil(D/32)) uint32 bitmaps: bit d of word w = term appears in
+    doc 32*w+d. 32 documents per word → 32× the HBM efficiency of a bf16
+    incidence tile for pure intersection counting."""
+    term_hi = c.vocab_size if term_hi is None else term_hi
+    n_words = (c.num_docs + 31) // 32
+    out = np.zeros((term_hi - term_lo, n_words), dtype=np.uint32)
+    inv = build_inverted_index(c)
+    for t in range(term_lo, term_hi):
+        ds = inv.postings(t)
+        np.bitwise_or.at(out[t - term_lo], ds // 32, (np.uint32(1) << (ds % 32).astype(np.uint32)))
+    return out
+
+
+def forward_padded(
+    c: Collection, max_len: int | None = None, pad_id: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """(D, L) padded forward docs + lengths — device-friendly forward index for
+    the LIST-SCAN / MULTI-SCAN paths (pad_id defaults to vocab_size)."""
+    lens = c.doc_lengths()
+    L = int(lens.max()) if max_len is None else max_len
+    pad = c.vocab_size if pad_id is None else pad_id
+    out = np.full((c.num_docs, L), pad, dtype=np.int32)
+    for d in range(c.num_docs):
+        ts = c.doc(d)[:L]
+        out[d, : len(ts)] = ts
+    return out, lens.astype(np.int32)

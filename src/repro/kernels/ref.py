@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cooc_gram_ref(b_i: jax.Array, b_j: jax.Array) -> jax.Array:
+    """C[I,J] = B[:,I]ᵀ B[:,J] over 0/1 incidence tiles.
+
+    b_i: (D, M), b_j: (D, N) — float (0/1 valued). Returns f32 (M, N).
+    Exact for D < 2^24 (f32 integer range).
+    """
+    return jnp.einsum(
+        "dm,dn->mn", b_i, b_j, preferred_element_type=jnp.float32
+    ).astype(jnp.float32)
+
+
+def bitpair_popcount_ref(rows_i: jax.Array, rows_j: jax.Array) -> jax.Array:
+    """Pair intersection sizes over bit-packed posting bitmaps.
+
+    rows_i: (M, W) uint32, rows_j: (N, W) uint32 — bit d of word w set iff the
+    term occurs in document 32*w + d. Returns int32 (M, N) with
+    out[m, n] = Σ_w popcount(rows_i[m, w] & rows_j[n, w]).
+    """
+    both = jnp.bitwise_and(rows_i[:, None, :], rows_j[None, :, :])
+    return jax.lax.population_count(both).astype(jnp.int32).sum(axis=-1)
+
+
+def segment_hist_ref(
+    ids: jax.Array, seg: jax.Array, num_rows: int, vocab: int
+) -> jax.Array:
+    """Batched histogram (the LIST-SCAN accumulator): out[r, v] = #{l : seg[l]
+    == r ∧ ids[l] == v}. Entries with seg < 0 or ids < 0 are padding."""
+    valid = (seg >= 0) & (ids >= 0)
+    flat = jnp.where(valid, seg * vocab + ids, num_rows * vocab)
+    counts = jax.ops.segment_sum(
+        jnp.where(valid, 1, 0).astype(jnp.int32),
+        flat,
+        num_segments=num_rows * vocab + 1,
+    )
+    return counts[:-1].reshape(num_rows, vocab)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: batched histogram accumulator (the LIST-SCAN core).
+
+LIST-SCAN's accumulator table is a histogram: row i of C is a bincount over
+the concatenated forward documents of postings(i). TPUs have no fast scatter,
+so the histogram is recast as two comparisons and one MXU matmul per tile:
+
+    seg_onehot[r, l] = (seg[l] == r)            (rows × blk_l)
+    id_onehot[l, v]  = (ids[l] == v)            (blk_l × blk_v)
+    out[r, v]       += seg_onehot @ id_onehot   (MXU, f32 exact)
+
+Grid = (V/blk_v, L/blk_l); the (rows, blk_v) tile stays VMEM-resident across
+the L sweep. Padding entries carry ids = -1 / seg = -1 and match nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segment_hist_kernel(ids_ref, seg_ref, out_ref, *, num_rows: int, blk_v: int):
+    v_blk = pl.program_id(0)
+    l_blk = pl.program_id(1)
+
+    @pl.when(l_blk == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]  # (1, blk_l) int32
+    seg = seg_ref[...]  # (1, blk_l) int32
+    blk_l = ids.shape[-1]
+
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (num_rows, blk_l), 0)
+    seg_onehot = (seg == row_iota).astype(jnp.bfloat16)  # (rows, blk_l)
+    v_iota = jax.lax.broadcasted_iota(jnp.int32, (blk_l, blk_v), 1)
+    v_base = v_blk * blk_v
+    id_onehot = ((ids.T - v_base) == v_iota).astype(jnp.bfloat16)  # (blk_l, blk_v)
+
+    out_ref[...] += jax.lax.dot_general(
+        seg_onehot,
+        id_onehot,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_rows", "vocab", "blk_v", "blk_l", "interpret")
+)
+def segment_hist_kernel(
+    ids: jax.Array,
+    seg: jax.Array,
+    *,
+    num_rows: int,
+    vocab: int,
+    blk_v: int = 128,
+    blk_l: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """ids, seg: (L,) int32 with -1 padding; L multiple of blk_l, vocab
+    multiple of blk_v (ops.segment_hist pads). Returns f32 (num_rows, vocab)."""
+    (l,) = ids.shape
+    ids2 = ids.reshape(1, l)
+    seg2 = seg.reshape(1, l)
+    grid = (vocab // blk_v, l // blk_l)
+    kernel = functools.partial(
+        _segment_hist_kernel, num_rows=num_rows, blk_v=blk_v
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_l), lambda v, lb: (0, lb)),
+            pl.BlockSpec((1, blk_l), lambda v, lb: (0, lb)),
+        ],
+        out_specs=pl.BlockSpec((num_rows, blk_v), lambda v, lb: (0, v)),
+        out_shape=jax.ShapeDtypeStruct((num_rows, vocab), jnp.float32),
+        interpret=interpret,
+    )(ids2, seg2)

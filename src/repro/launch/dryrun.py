@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape) cell on the
+production meshes and extract memory / cost / collective evidence.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe-1b-7b \
+        --shape train_4k --mesh single          # 16×16 (256 chips)
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi   # 2×16×16
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init) — hence its position before the docstring
+imports. Results append as JSON lines to --out (default
+experiments/dryrun.jsonl)."""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def _compile(cell, mesh):
+    # set_mesh (not just `with mesh`) so in-model with_sharding_constraint
+    # (maybe_shard) sees the abstract mesh during tracing
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(cell.fn, donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        return lowered.compile()
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_path: str, extra=None, cell_kw=None) -> dict:
+    cell_kw = cell_kw or {}
+    from repro.configs import get_spec
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": int(n_chips),
+    }
+    t0 = time.time()
+    try:
+        cell = build_cell(arch, shape_name, mesh, **cell_kw)
+        if extra:
+            rec.update(extra)
+        t_lower = time.time()
+        compiled = _compile(cell, mesh)
+        t_compile = time.time()
+        mem = rl.memory_stats(compiled)
+        roof = rl.analyze(compiled, n_chips, cell.model_flops)
+        if get_spec(arch).family == "lm":
+            # XLA counts the layer-scan body ONCE → extrapolate exact costs
+            # from unrolled 1-layer and 2-layer compiles (homogeneous stack):
+            # cost(L) = cost(1) + (L-1)·(cost(2) − cost(1))
+            L = get_spec(arch).model.n_layers
+            r1 = rl.analyze(
+                _compile(build_cell(arch, shape_name, mesh, n_layers=1, unroll=True, **cell_kw), mesh),
+                n_chips, cell.model_flops,
+            )
+            r2 = rl.analyze(
+                _compile(build_cell(arch, shape_name, mesh, n_layers=2, unroll=True, **cell_kw), mesh),
+                n_chips, cell.model_flops,
+            )
+            lerp = lambda a, b: max(a + (L - 1) * (b - a), a)
+            roof = rl.Roofline(
+                flops=lerp(r1.flops, r2.flops),
+                bytes_accessed=lerp(r1.bytes_accessed, r2.bytes_accessed),
+                coll_bytes=lerp(r1.coll_bytes, r2.coll_bytes),
+                coll_breakdown={
+                    k: lerp(r1.coll_breakdown[k], r2.coll_breakdown[k])
+                    for k in r1.coll_breakdown
+                },
+                n_chips=n_chips,
+                model_flops=cell.model_flops,
+                hbm_resident_bytes=roof.hbm_resident_bytes,
+            )
+            rec["layer_extrapolated"] = True
+        from repro.launch.specs import sharded_arg_bytes
+
+        args_pc = sharded_arg_bytes(cell.args, mesh)
+        act_pc = cell.act_bytes / n_chips
+        rec["analytic"] = {
+            "args_gb_per_chip": round(args_pc / 2**30, 3),
+            "act_gb_per_chip": round(act_pc / 2**30, 3),
+            "fits_16gb": bool((args_pc + act_pc) < 16 * 2**30),
+        }
+        rec.update(
+            kind=cell.kind,
+            notes=cell.notes,
+            ok=True,
+            lower_s=round(t_lower - t0, 2),
+            compile_s=round(t_compile - t_lower, 2),
+            memory=mem,
+            roofline=roof.to_dict(),
+        )
+        print(
+            f"[OK] {arch}/{shape_name} mesh={rec['mesh']} "
+            f"hbm={mem.get('total_hbm_bytes', 0)/2**30:.2f}GiB "
+            f"t_comp={roof.t_compute*1e3:.2f}ms t_mem={roof.t_memory*1e3:.2f}ms "
+            f"t_coll={roof.t_collective*1e3:.2f}ms bound={roof.bottleneck} "
+            f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)"
+        )
+    except Exception as e:
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        print(f"[FAIL] {arch}/{shape_name} mesh={rec['mesh']}: {rec['error']}")
+    if out_path:
+        os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.specs import all_cells
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                r = json.loads(line)
+                if r.get("ok"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            key = (arch, shape, "2x16x16" if mp else "16x16")
+            if key in done:
+                continue
+            rec = run_cell(arch, shape, mp, args.out)
+            failures += 0 if rec.get("ok") else 1
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

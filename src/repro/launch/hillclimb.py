@@ -1,0 +1,133 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-lower a cell under config variants and record
+the roofline deltas (hypothesis → change → before → after).
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell qwen-decode
+    PYTHONPATH=src python -m repro.launch.hillclimb --all
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+# Each experiment: (name, arch, shape, multi_pod, cell_kw, hypothesis)
+EXPERIMENTS = {
+    # ---- worst roofline fraction: qwen dense 110B training ---------------
+    "qwen-train": [
+        (
+            "baseline",
+            "qwen1.5-110b", "train_4k", False, {},
+            "GSPMD resolves the FSDP-sharded contraction dim by all-reducing "
+            "(B,S,ff)-sized partial outputs (~GBs/layer) instead of gathering "
+            "the ~450MB/layer weight shards.",
+        ),
+        (
+            "zero3-weight-gather",
+            "qwen1.5-110b", "train_4k", False,
+            {"overrides": {"zero3_gather_weights": True}},
+            "Constrain weights to (replicated, model) at the use point → one "
+            "all-gather of params_bf16/model_par per layer (ZeRO-3). Napkin: "
+            "80 layers × ~0.45GB ≈ 36GB fwd (+2× bwd/remat) ≈ 100GB vs "
+            "4.4TB baseline → predict ~10-40× lower t_coll.",
+        ),
+        (
+            "zero3 + bf16-attn-scores",
+            "qwen1.5-110b", "train_4k", False,
+            {"overrides": {"zero3_gather_weights": True, "kv_chunk": 4096}},
+            "Larger attention blocks (4096 vs 2048 chunks) quarter the "
+            "number of online-softmax rescale passes; HBM bytes per score "
+            "block stay VMEM-feasible per chip at d_head=128.",
+        ),
+    ],
+    # ---- most collective-bound cell: qwen long_500k decode --------------
+    "qwen-decode": [
+        (
+            "baseline",
+            "qwen1.5-110b", "long_500k", False, {},
+            "FSDP layout at decode forces per-token all-gather of the "
+            "d_model-sharded weight shards (~params_bf16/model_par bytes/step).",
+        ),
+        (
+            "dshard-activations",
+            "qwen1.5-110b", "long_500k", False,
+            {"overrides": {"shard_decode_dmodel": True}},
+            "2D-TP serving: keep decode activations d_model-sharded over the "
+            "data axes so contractions run shard-local and only (B,1,·) "
+            "partials are all-reduced — predicted ≥10× collective reduction.",
+        ),
+    ],
+    # ---- the paper's own technique: distributed Gram --------------------
+    "cooc-gram": [
+        (
+            "allgather (paper-faithful LIST-BLOCKS)",
+            "cooc-wt10g", "head_gram", False,
+            {"overrides": {"schedule": "allgather"}},
+            "One all-gather of the full right operand (V bytes/device) "
+            "before the Gram matmul — bandwidth burst, no overlap.",
+        ),
+        (
+            "ring (beyond-paper)",
+            "cooc-wt10g", "head_gram", False,
+            {"overrides": {"schedule": "ring"}},
+            "Rotate V/16 column blocks via collective-permute; same total "
+            "bytes but permute (not all-gather) → overlappable with the "
+            "block matmul and O(V_loc) peak instead of O(V).",
+        ),
+        (
+            "ring + half doc chunk",
+            "cooc-wt10g", "head_gram", False,
+            {"overrides": {"schedule": "ring", "doc_chunk": 262144}},
+            "Halving the doc tile halves per-call VMEM pressure; collective "
+            "bytes per processed doc unchanged — expect ~2× lower t_coll "
+            "per call with the same t_coll/doc.",
+        ),
+    ],
+    # ---- representative MoE training cell -------------------------------
+    "deepseek-train": [
+        (
+            "baseline",
+            "deepseek-v3-671b", "train_4k", False, {},
+            "EP combine psum is f32 (T·d·4 bytes/layer over 'model').",
+        ),
+        (
+            "bf16-combine",
+            "deepseek-v3-671b", "train_4k", False,
+            {"overrides": {"moe_combine_dtype": "bfloat16"}},
+            "Cast the combined expert output to bf16 before the psum — "
+            "halves MoE collective bytes; expert outputs are bf16-born, so "
+            "only the k-way weighted sum loses f32 carry.",
+        ),
+        (
+            "capacity-1.0",
+            "deepseek-v3-671b", "train_4k", False,
+            {"overrides": {"capacity_factor": 1.0}},
+            "cf 1.25→1.0 drops ≤25% of overflow tokens; expert GEMM FLOPs "
+            "and dispatch traffic shrink 20%; quality cost is the known "
+            "GShard drop trade-off (not measurable in a dry-run).",
+        ),
+    ],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=sorted(EXPERIMENTS))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/hillclimb.jsonl")
+    args = ap.parse_args()
+    names = sorted(EXPERIMENTS) if args.all else [args.cell]
+    for name in names:
+        for variant, arch, shape, mp, kw, hyp in EXPERIMENTS[name]:
+            print(f"\n=== {name} / {variant} ===\nhypothesis: {hyp}")
+            run_cell(
+                arch, shape, mp, args.out,
+                extra={"experiment": name, "variant": variant, "hypothesis": hyp},
+                cell_kw=kw,
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh: 16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import; tests and
+benchmarks see exactly one device)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for subprocess tests (8 placeholder devices)."""
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -1,0 +1,203 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Terms (per chip, seconds):
+    compute    = HLO_FLOPs / PEAK_FLOPS
+    memory     = HLO_bytes / HBM_BW
+    collective = Σ collective-operand-bytes / ICI_BW
+
+``cost_analysis`` provides FLOPs/bytes of the partitioned (per-device)
+module. Collective bytes are NOT in cost_analysis — we parse the optimized
+HLO text and sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (per-device shapes, so the result is
+bytes crossing this chip's links)."""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %x = bf16[16,512,128]{2,1,0} all-gather(...)   (also async "-start")
+_COLL_ALT = "|".join(_COLLECTIVES)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s(" + _COLL_ALT + r")(?:-start)?[\s(]"
+)
+# tuple-result collectives:  = (bf16[...], bf16[...]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(" + _COLL_ALT + r")(?:-start)?[\s(]"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum of result-shape bytes per collective kind (per device)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        if "-start" in line and "-done" not in line:
+            pass  # count the -start (has the shapes); -done skipped below
+        if "-done" in line:
+            continue
+        m = _TUPLE_RE.search(line)  # tuple-result form FIRST (N operands)
+        if m:
+            shapes, kind = m.groups()
+            for dtype, dims in _SHAPE_RE.findall(shapes):
+                out[kind] += _shape_bytes(dtype, dims)
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_breakdown: dict
+    n_chips: int
+    model_flops: float
+    hbm_resident_bytes: float = 0.0  # args+outputs+temps from memory_analysis
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        """Upper bound: raw HLO operand bytes (CPU backend has no TPU-style
+        fusion, so every elementwise op's operands count — pessimistic)."""
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_memory_fused(self) -> float:
+        """Fusion-adjusted estimate: on TPU each HBM-resident byte is
+        streamed O(1) times per step (read + write ≈ 2×). Lower bound."""
+        return 2.0 * self.hbm_resident_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory_fused,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time = max of the three overlappable terms (memory
+        uses the fused estimate — the raw CPU-HLO bytes are reported too)."""
+        return max(self.t_compute, self.t_memory_fused, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs (remat/dispatch waste)."""
+        total = self.flops * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on model-FLOPs utilization implied by the roofline."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / self.n_chips / PEAK_FLOPS) / self.t_bound
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_accessed,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_memory_fused_s": self.t_memory_fused,
+            "t_collective_s": self.t_collective,
+            "t_bound_s": self.t_bound,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def analyze(compiled, n_chips: int, model_flops: float) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mem = memory_stats(compiled)
+    return Roofline(
+        flops=flops,
+        bytes_accessed=byts,
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown=coll,
+        n_chips=n_chips,
+        model_flops=model_flops,
+        hbm_resident_bytes=float(mem.get("total_hbm_bytes", 0)),
+    )
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        if hasattr(ma, k):
+            out[k] = int(getattr(ma, k))
+    if "argument_size_in_bytes" in out:
+        out["total_hbm_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out

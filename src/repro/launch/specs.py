@@ -1,0 +1,439 @@
+"""Cell builder: (arch × input-shape × mesh) → the jit-able step function +
+fully-sharded ShapeDtypeStruct inputs (no device allocation — the shannon/
+kernels pattern). This is the single source of truth the dry-run, the
+roofline analysis and the launchers all share."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec, ShapeSpec, get_spec
+from repro.launch import train as train_factories
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as lm_mod
+from repro.runtime.sharding import (
+    fsdp_axes,
+    gnn_param_specs,
+    lm_param_specs,
+    recsys_param_specs,
+)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Callable
+    args: tuple
+    donate: tuple = ()
+    model_flops: float = 0.0   # analytic "useful" FLOPs per step (global)
+    act_bytes: float = 0.0     # analytic GLOBAL activation working set
+    notes: str = ""
+
+
+def sharded_arg_bytes(args, mesh) -> float:
+    """Per-chip bytes of all inputs, honoring each leaf's PartitionSpec
+    (GSPMD pads non-divisible dims; we ignore padding — ≤1 tile)."""
+    total = 0.0
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf_bytes(l):
+        nonlocal total
+        if not isinstance(l, jax.ShapeDtypeStruct):
+            return
+        ways = 1
+        spec = getattr(l.sharding, "spec", None)
+        if spec is not None:
+            for entry in spec:
+                for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                    if ax is not None:
+                        ways *= axis_size[ax]
+        total += int(np.prod(l.shape)) * l.dtype.itemsize / ways
+
+    jax.tree.map(leaf_bytes, args, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return total
+
+
+def _fit_spec(shape, spec, mesh) -> P:
+    """Drop sharding on dimensions the mesh extent does not divide (input
+    layouts must tile exactly; GSPMD padding only applies to intermediates).
+    E.g. MiniCPM's 73448-row vocab is not 16-way divisible → replicated."""
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        ways = int(np.prod([axis_size[a] for a in axes]))
+        if dim % ways == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), jnp.dtype(dtype),
+        sharding=NamedSharding(mesh, _fit_spec(shape, spec, mesh)),
+    )
+
+
+def _attach(tree, specs, mesh):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(
+            l.shape, l.dtype,
+            sharding=NamedSharding(mesh, _fit_spec(l.shape, s, mesh)),
+        ),
+        tree,
+        specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+# --------------------------------------------------------------------------
+# LM cells
+# --------------------------------------------------------------------------
+def _lm_params_sds(cfg, mesh):
+    shapes_tree = lm_mod.param_shapes(cfg)
+    specs = lm_param_specs(shapes_tree, mesh)
+    params = jax.eval_shape(lambda: lm_mod.init_params(jax.random.PRNGKey(0), cfg))
+    return _attach(params, specs, mesh), specs, shapes_tree
+
+
+def _lm_cell(
+    spec: ArchSpec, shape: ShapeSpec, mesh, *, n_layers: int | None = None,
+    unroll: bool = False, overrides: dict | None = None,
+) -> Cell:
+    # Cost accounting: XLA counts while-loop (scan) bodies ONCE, so the
+    # full-depth cell compiles the scan form (correct memory analysis, small
+    # HLO), and the dry-run ALSO compiles n_layers∈{1,2} unrolled variants to
+    # extrapolate exact per-layer FLOPs/bytes/collectives (homogeneous stack).
+    repl = dict(overrides or {})
+    repl["unroll_layers"] = unroll
+    if n_layers is not None:
+        repl["n_layers"] = n_layers
+    cfg = dataclasses.replace(spec.model, **repl)
+    dp = fsdp_axes(mesh)
+    S, B = shape.sizes["seq_len"], shape.sizes["global_batch"]
+    params_sds, param_specs, shapes_tree = _lm_params_sds(cfg, mesh)
+    n_active = spec.model.num_active_params()  # FULL config for model_flops
+
+    if shape.kind == "train":
+        # optimizer choice must follow the FULL model size, not the L-override
+        opt, opt_name = train_factories.pick_optimizer(spec.model.num_params())
+        ostate = jax.eval_shape(opt.init, params_sds)
+        ospecs = train_factories.opt_state_specs(opt_name, param_specs, shapes_tree)
+        ostate = _attach(ostate, ospecs, mesh)
+        tokens = _sds((B, S), jnp.int32, mesh, P(dp, None))
+        fn = train_factories.make_lm_train_step(cfg, opt)
+        act = (
+            cfg.n_layers * B * S * cfg.d_model * 2      # remat carries (bf16)
+            + B * S * cfg.vocab_size * 4                # logits (f32)
+            + 6 * B * S * cfg.d_model * 4               # live working set
+        )
+        return Cell(
+            spec.arch_id, shape.name, "train", fn,
+            ((params_sds, ostate), {"tokens": tokens}),
+            donate=(0,),
+            model_flops=6.0 * n_active * B * S,
+            act_bytes=act,
+            notes=f"optimizer={opt_name}",
+        )
+
+    if shape.kind == "prefill":
+        tokens = _sds((B, S), jnp.int32, mesh, P(dp, None))
+        fn = functools.partial(lm_mod.prefill, cfg=cfg)
+        cache_bytes = sum(
+            int(np.prod(s_)) * 2 for s_ in lm_mod.cache_shapes(cfg, B, S).values()
+        )
+        act = cache_bytes + 6 * B * S * cfg.d_model * 2 + B * cfg.vocab_size * 4
+        return Cell(
+            spec.arch_id, shape.name, "prefill", fn, (params_sds, tokens),
+            model_flops=2.0 * n_active * B * S,
+            act_bytes=act,
+        )
+
+    # decode: one new token against a seq_len KV cache
+    cache_shapes = lm_mod.cache_shapes(cfg, B, S)
+    if B == 1:
+        batch_spec, seq_axes = None, dp + ("model",)
+    else:
+        batch_spec, seq_axes = dp, ("model",)
+    cache_specs = {
+        k: P(None, batch_spec, seq_axes, *(None,) * (len(s) - 3))
+        for k, s in cache_shapes.items()
+    }
+    cache = {
+        k: _sds(s, cfg.jdtype, mesh, cache_specs[k]) for k, s in cache_shapes.items()
+    }
+    tokens = _sds((B, 1), jnp.int32, mesh, P(batch_spec, None))
+    pos = _sds((), jnp.int32, mesh, P())
+    fn = functools.partial(lm_mod.decode_step, cfg=cfg)
+    # useful decode flops: param matmuls + attention over the cache
+    # (per-POSITION cache dims: shapes are (L, B, S, ...) → prod over [3:],
+    # then × S positions attended, × L layers via the leading dim)
+    cache_elems = sum(
+        s[0] * int(np.prod(s[3:])) for s in cache_shapes.values()
+    )
+    return Cell(
+        spec.arch_id, shape.name, "decode", fn,
+        (params_sds, cache, tokens, pos),
+        donate=(1,),
+        model_flops=2.0 * n_active * B + 2.0 * B * S * cache_elems,
+        act_bytes=B * cfg.vocab_size * 4 + 4 * B * cfg.n_heads * S * 4,
+    )
+
+
+# --------------------------------------------------------------------------
+# GNN cells
+# --------------------------------------------------------------------------
+def _gnn_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    dp = fsdp_axes(mesh)
+    sz = shape.sizes
+    cfg = dataclasses.replace(
+        spec.model,
+        d_in=sz["d_feat"],
+        n_classes=sz.get("n_classes", spec.model.n_classes),
+    )
+    params = jax.eval_shape(lambda: gnn_mod.init_params(jax.random.PRNGKey(0), cfg))
+    specs = gnn_param_specs(gnn_mod.param_shapes(cfg), mesh)
+    params_sds = _attach(params, specs, mesh)
+    opt, opt_name = train_factories.pick_optimizer(0)
+    ostate = _attach(
+        jax.eval_shape(opt.init, params_sds),
+        train_factories.opt_state_specs(opt_name, specs, gnn_mod.param_shapes(cfg)),
+        mesh,
+    )
+    state = (params_sds, ostate)
+    H = cfg.d_hidden
+    dense_flops = 2 * (sz["d_feat"] * H * 2 + H * H * 2 + H * cfg.n_classes)
+
+    if shape.kind == "full_graph":
+        # pad node/edge counts to mesh multiples (isolated pad nodes with
+        # mask=0 — harmless; the dry-run is shape-level anyway)
+        pad = lambda n: int(-(-n // 1024) * 1024)
+        N, E = pad(sz["n_nodes"]), pad(sz["n_edges"])
+        feats = _sds((N, sz["d_feat"]), jnp.float32, mesh, P(dp, None))
+        ei = _sds((2, E), jnp.int32, mesh, P(None, dp))
+        labels = _sds((N,), jnp.int32, mesh, P(dp))
+        mask = _sds((N,), jnp.float32, mesh, P(dp))
+        fn = train_factories.make_gnn_full_graph_step(cfg, opt)
+        return Cell(
+            spec.arch_id, shape.name, "train", fn,
+            (state, feats, ei, labels, mask), donate=(0,),
+            model_flops=3.0 * (N * dense_flops + 2 * E * sz["d_feat"]),
+        )
+    if shape.kind == "sampled":
+        Bn = sz["batch_nodes"]
+        f1, f2 = sz["fanout"]
+        F = sz["d_feat"]
+        seed = _sds((Bn, F), jnp.float32, mesh, P(dp, None))
+        hop1 = _sds((Bn, f1, F), jnp.float32, mesh, P(dp, None, None))
+        hop2 = _sds((Bn, f1, f2, F), jnp.float32, mesh, P(dp, None, None, None))
+        labels = _sds((Bn,), jnp.int32, mesh, P(dp))
+        fn = train_factories.make_gnn_sampled_step(
+            dataclasses.replace(cfg, sample_sizes=(f1, f2)), opt
+        )
+        return Cell(
+            spec.arch_id, shape.name, "train", fn,
+            (state, seed, hop1, hop2, labels), donate=(0,),
+            model_flops=3.0 * Bn * (1 + f1 + f1 * f2) * dense_flops,
+        )
+    # batched_graphs (molecule)
+    Bg, Nn, Ne = sz["batch"], sz["n_nodes"], sz["n_edges"]
+    N, E = Bg * Nn, Bg * Ne
+    feats = _sds((N, sz["d_feat"]), jnp.float32, mesh, P(dp, None))
+    ei = _sds((2, E), jnp.int32, mesh, P(None, dp))
+    gids = _sds((N,), jnp.int32, mesh, P(dp))
+    labels = _sds((Bg,), jnp.int32, mesh, P(dp))
+    base_step = train_factories.make_gnn_batched_graphs_step(cfg, opt)
+    fn2 = lambda state, feats, ei, gids, labels: base_step(
+        state, feats, ei, gids, labels, Bg
+    )
+    return Cell(
+        spec.arch_id, shape.name, "train", fn2,
+        (state, feats, ei, gids, labels), donate=(0,),
+        model_flops=3.0 * (N * dense_flops + 2 * E * sz["d_feat"]),
+    )
+
+
+# --------------------------------------------------------------------------
+# recsys cells
+# --------------------------------------------------------------------------
+def _recsys_batch_sds(cfg, B, mesh, with_label=True):
+    dp = fsdp_axes(mesh)
+    bspec = P(dp) if B > 1 else P(None)
+    bspec2 = P(dp, None) if B > 1 else P(None, None)
+    out = {}
+    if cfg.kind == "dien":
+        out = {
+            "hist_items": _sds((B, cfg.seq_len), jnp.int32, mesh, bspec2),
+            "hist_cats": _sds((B, cfg.seq_len), jnp.int32, mesh, bspec2),
+            "target_item": _sds((B,), jnp.int32, mesh, bspec),
+            "target_cat": _sds((B,), jnp.int32, mesh, bspec),
+        }
+    elif cfg.kind == "bert4rec":
+        out = {
+            "items": _sds((B, cfg.seq_len), jnp.int32, mesh, bspec2),
+            "positions": _sds((B, cfg.n_masked), jnp.int32, mesh, bspec2),
+        }
+        if with_label:
+            out["labels"] = _sds((B, cfg.n_masked), jnp.int32, mesh, bspec2)
+    elif cfg.kind == "xdeepfm":
+        ns = cfg.n_fields - cfg.n_multi_hot
+        out = {
+            "single_ids": _sds((B, ns), jnp.int32, mesh, bspec2),
+            "multi_ids": _sds(
+                (B, cfg.n_multi_hot, cfg.max_bag), jnp.int32, mesh,
+                P(dp, None, None) if B > 1 else P(None, None, None),
+            ),
+        }
+    else:  # bst
+        out = {
+            "hist_items": _sds((B, cfg.seq_len), jnp.int32, mesh, bspec2),
+            "target_item": _sds((B,), jnp.int32, mesh, bspec),
+        }
+    if with_label and cfg.kind != "bert4rec":
+        out["label"] = _sds((B,), jnp.int32, mesh, bspec)
+    return out
+
+
+def _recsys_dense_params(cfg) -> int:
+    shapes = recsys_mod.param_shapes(cfg)
+    total = 0
+    for path, s in jax.tree.flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, int) for i in x)
+    )[0]:
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name not in ("item_embed", "cat_embed", "embed", "linear"):
+            total += int(np.prod(s))
+    return total
+
+
+def _recsys_flops(cfg, B) -> float:
+    dense = _recsys_dense_params(cfg)
+    if cfg.kind == "dien":
+        gru = 2 * (3 * (2 * cfg.embed_dim) * cfg.gru_dim + 3 * cfg.gru_dim ** 2)
+        return B * (2 * cfg.seq_len * 2 * gru + 2 * dense)
+    if cfg.kind in ("bert4rec", "bst"):
+        S = cfg.seq_len + (1 if cfg.kind == "bst" else 0)
+        # blocks applied per position + attention S² term
+        e = cfg.embed_dim
+        blk = cfg.n_blocks * (2 * S * (4 * e * e + 8 * e * e) + 4 * S * S * e)
+        return B * (blk + 2 * dense)
+    return B * 2 * dense  # xdeepfm: CIN+MLP params each used once per example
+
+
+def _recsys_cell(spec: ArchSpec, shape: ShapeSpec, mesh) -> Cell:
+    cfg = spec.model
+    dp = fsdp_axes(mesh)
+    params = jax.eval_shape(lambda: recsys_mod.init_params(jax.random.PRNGKey(0), cfg))
+    specs = recsys_param_specs(recsys_mod.param_shapes(cfg), mesh)
+    params_sds = _attach(params, specs, mesh)
+
+    if shape.kind == "train":
+        B = shape.sizes["batch"]
+        opt, opt_name = train_factories.pick_optimizer(0)
+        ostate = _attach(
+            jax.eval_shape(opt.init, params_sds),
+            train_factories.opt_state_specs(opt_name, specs, recsys_mod.param_shapes(cfg)),
+            mesh,
+        )
+        batch = _recsys_batch_sds(cfg, B, mesh, with_label=True)
+        fn = train_factories.make_recsys_train_step(cfg, opt)
+        return Cell(
+            spec.arch_id, shape.name, "train", fn,
+            ((params_sds, ostate), batch), donate=(0,),
+            model_flops=3.0 * _recsys_flops(cfg, B),
+        )
+    if shape.kind == "serve":
+        B = shape.sizes["batch"]
+        batch = _recsys_batch_sds(cfg, B, mesh, with_label=False)
+        if cfg.kind == "bert4rec":
+            fn = lambda p, b: recsys_mod.bert4rec_logits(p, b["items"], b["positions"], cfg)
+        else:
+            fn = functools.partial(recsys_mod.FORWARD_FNS[cfg.kind], cfg=cfg)
+        return Cell(
+            spec.arch_id, shape.name, "serve", fn, (params_sds, batch),
+            model_flops=_recsys_flops(cfg, B),
+        )
+    # retrieval: one context × n_candidates
+    C = shape.sizes["n_candidates"]
+    batch = _recsys_batch_sds(cfg, 1, mesh, with_label=False)
+    cands = _sds((C,), jnp.int32, mesh, P(dp))
+    fn = functools.partial(recsys_mod.retrieval_scores, cfg=cfg)
+    flops = 2.0 * C * cfg.embed_dim if cfg.kind != "xdeepfm" else _recsys_flops(cfg, C)
+    return Cell(
+        spec.arch_id, shape.name, "retrieval", fn, (params_sds, batch, cands),
+        model_flops=flops,
+    )
+
+
+# --------------------------------------------------------------------------
+# cooc cells (the paper's workload)
+# --------------------------------------------------------------------------
+def _cooc_cell(spec: ArchSpec, shape: ShapeSpec, mesh, overrides: dict | None = None) -> Cell:
+    from repro.core.distributed import make_distributed_gram
+    from repro.kernels import ops as kops
+
+    cfg = dataclasses.replace(spec.model, **(overrides or {}))
+    dp = fsdp_axes(mesh)
+    if shape.kind == "cooc_gram":
+        D, H = shape.sizes["doc_chunk"], shape.sizes["head"]
+        if overrides and "doc_chunk" in overrides:
+            D = cfg.doc_chunk
+        B = _sds((D, H), cfg.dtype, mesh, P(dp, "model"))
+        fn = make_distributed_gram(mesh, schedule=cfg.schedule)
+        return Cell(
+            spec.arch_id, shape.name, "cooc_gram", fn, (B,),
+            model_flops=2.0 * D * H * H,
+            notes=f"schedule={cfg.schedule}",
+        )
+    # cooc_hist: tail LIST-SCAN histogram
+    L = shape.sizes["postings_chunk"]
+    rows, V = shape.sizes["rows"], shape.sizes["vocab_tile"]
+    ids = _sds((L,), jnp.int32, mesh, P(dp))
+    seg = _sds((L,), jnp.int32, mesh, P(dp))
+    fn = lambda i, s: kops.segment_hist(i, s, num_rows=rows, vocab=V, use_kernel=False)
+    return Cell(
+        spec.arch_id, shape.name, "cooc_hist", fn, (ids, seg),
+        model_flops=2.0 * L,  # one add per posting
+    )
+
+
+# --------------------------------------------------------------------------
+def build_cell(arch_id: str, shape_name: str, mesh, **kw) -> Cell:
+    spec = get_spec(arch_id)
+    shape = spec.shapes[shape_name]
+    builder = {
+        "lm": _lm_cell,
+        "gnn": _gnn_cell,
+        "recsys": _recsys_cell,
+        "cooc": _cooc_cell,
+    }[spec.family]
+    if spec.family in ("lm", "cooc"):
+        return builder(spec, shape, mesh, **kw)
+    return builder(spec, shape, mesh)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """The 40 assigned (arch × shape) cells + the paper's own 2 cells."""
+    out = []
+    from repro.configs import list_archs
+
+    for arch in list_archs():
+        spec = get_spec(arch)
+        for name in spec.shapes:
+            out.append((arch, name))
+    return out

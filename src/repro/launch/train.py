@@ -1,0 +1,117 @@
+"""Generic train-step factories + optimizer-state sharding derivation.
+
+Optimizer policy: ≥50B params → Adafactor (factored second moments — the only
+way params+grads+state fit 16 GB/chip at 340B/671B); smaller models → AdamW
+with bf16 moments.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import gnn as gnn_mod
+from repro.models import recsys as recsys_mod
+from repro.models import transformer as lm_mod
+from repro.optim import adamw, adafactor, apply_updates, clip_by_global_norm, warmup_cosine
+
+
+def pick_optimizer(num_params: int):
+    lr = warmup_cosine(3e-4, 2000, 100_000)
+    if num_params >= 50e9:
+        return adafactor(lr), "adafactor"
+    return adamw(lr, moment_dtype=jnp.bfloat16), "adamw"
+
+
+def opt_state_specs(opt_name: str, param_specs, shapes_tree):
+    """PartitionSpecs for the optimizer state, derived from param specs."""
+    if opt_name == "adamw":
+        return {"m": param_specs, "v": param_specs, "count": P()}
+    if opt_name == "sgd":
+        return {"mu": param_specs, "count": P()}
+    if opt_name == "adafactor":
+        def leaf(spec, shape):
+            # PartitionSpec normalizes trailing Nones — pad back to ndim
+            parts = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+            if len(shape) >= 2:
+                return {"r": P(*parts[:-1]), "c": P(*parts[:-2], parts[-1])}
+            return {"v": spec}
+
+        is_shape = lambda x: isinstance(x, tuple) and all(isinstance(i, int) for i in x)
+        stats = jax.tree.map(
+            leaf, param_specs, shapes_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        return {"stats": stats, "count": P()}
+    raise ValueError(opt_name)
+
+
+def make_lm_train_step(cfg, opt):
+    def step(state, batch):
+        params, opt_state = state
+
+        def lf(p):
+            return lm_mod.loss_fn(p, batch, cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return (params, opt_state), {**metrics, "loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def make_gnn_full_graph_step(cfg, opt):
+    def step(state, feats, edge_index, labels, mask):
+        params, opt_state = state
+        loss, grads = jax.value_and_grad(gnn_mod.loss_full_graph)(
+            params, feats, edge_index, labels, mask, cfg
+        )
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return (params, opt_state), {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def make_gnn_sampled_step(cfg, opt):
+    def step(state, seed_feats, hop1, hop2, labels):
+        params, opt_state = state
+        loss, grads = jax.value_and_grad(gnn_mod.loss_sampled)(
+            params, seed_feats, hop1, hop2, labels, cfg
+        )
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return (params, opt_state), {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def make_gnn_batched_graphs_step(cfg, opt):
+    def step(state, feats, edge_index, graph_ids, labels, n_graphs):
+        params, opt_state = state
+        loss, grads = jax.value_and_grad(gnn_mod.loss_batched_graphs)(
+            params, feats, edge_index, graph_ids, labels, cfg, n_graphs
+        )
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return (params, opt_state), {"loss": loss, "grad_norm": gnorm}
+
+    return step
+
+
+def make_recsys_train_step(cfg, opt):
+    def step(state, batch):
+        params, opt_state = state
+        loss, grads = jax.value_and_grad(recsys_mod.loss_fn)(params, batch, cfg)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return (params, opt_state), {"loss": loss, "grad_norm": gnorm}
+
+    return step

@@ -1,0 +1,1 @@
+"""Model zoo: LM transformers (GQA/MLA/MoE/MTP), GraphSAGE, recsys rankers."""

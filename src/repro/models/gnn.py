@@ -1,0 +1,153 @@
+"""GraphSAGE (mean aggregator) — full-graph and sampled-minibatch modes.
+
+JAX has no sparse SpMM beyond BCOO, so message passing is implemented the
+TPU-native way: edge-index gather + ``jax.ops.segment_sum`` scatter (the same
+substrate as the LIST-SCAN co-occurrence path — see DESIGN.md §8). The
+minibatch mode consumes fixed-fanout neighbor blocks from the real sampler in
+data/sampler.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 2
+    d_in: int = 602
+    d_hidden: int = 128
+    n_classes: int = 41
+    aggregator: str = "mean"
+    sample_sizes: tuple = (25, 10)
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def param_shapes(cfg: GNNConfig) -> dict:
+    shapes = {}
+    d_prev = cfg.d_in
+    for l in range(cfg.n_layers):
+        shapes[f"layer{l}"] = {
+            "w_self": (d_prev, cfg.d_hidden),
+            "w_neigh": (d_prev, cfg.d_hidden),
+            "b": (cfg.d_hidden,),
+        }
+        d_prev = cfg.d_hidden
+    shapes["head"] = {"w": (d_prev, cfg.n_classes), "b": (cfg.n_classes,)}
+    return shapes
+
+
+def init_params(key: jax.Array, cfg: GNNConfig) -> dict:
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for (path, shape), k in zip(flat, keys):
+        if len(shape) == 1:
+            leaves.append(jnp.zeros(shape, cfg.jdtype))
+        else:
+            scale = (1.0 / shape[0]) ** 0.5
+            leaves.append((jax.random.normal(k, shape) * scale).astype(cfg.jdtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def _sage_layer(p: dict, h: jax.Array, h_neigh: jax.Array) -> jax.Array:
+    out = h @ p["w_self"] + h_neigh @ p["w_neigh"] + p["b"]
+    out = jax.nn.relu(out)
+    # GraphSAGE L2 normalization
+    norm = jnp.linalg.norm(out, axis=-1, keepdims=True)
+    return out / jnp.maximum(norm, 1e-6)
+
+
+def forward_full_graph(
+    params: dict, feats: jax.Array, edge_index: jax.Array, cfg: GNNConfig
+) -> jax.Array:
+    """feats: (N, F); edge_index: (2, E) int32 rows (src, dst). Messages flow
+    src → dst; mean aggregation via two segment_sums (sum / degree)."""
+    n = feats.shape[0]
+    src, dst = edge_index[0], edge_index[1]
+    deg = jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst, num_segments=n)
+    deg = jnp.maximum(deg, 1.0)[:, None]
+    h = feats.astype(cfg.jdtype)
+    for l in range(cfg.n_layers):
+        msg = jax.ops.segment_sum(h[src], dst, num_segments=n)
+        h_neigh = (msg / deg).astype(cfg.jdtype)
+        h = _sage_layer(params[f"layer{l}"], h, h_neigh)
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def forward_sampled(
+    params: dict,
+    seed_feats: jax.Array,   # (B, F)
+    hop1_feats: jax.Array,   # (B, f1, F)
+    hop2_feats: jax.Array,   # (B, f1, f2, F)
+    cfg: GNNConfig,
+) -> jax.Array:
+    """Two-layer fixed-fanout minibatch forward (fanouts f1, f2). Dense
+    gathers were done by the host sampler; aggregation is mean over the
+    fanout axes (GraphSAGE with sampling, arXiv:1706.02216 Alg. 2)."""
+    assert cfg.n_layers == 2
+    # layer 0 applied at hop-1 nodes: aggregate hop-2 neighborhoods
+    h1 = _sage_layer(
+        params["layer0"],
+        hop1_feats.astype(cfg.jdtype),
+        hop2_feats.astype(cfg.jdtype).mean(axis=2),
+    )  # (B, f1, H)
+    h0 = _sage_layer(
+        params["layer0"],
+        seed_feats.astype(cfg.jdtype),
+        hop1_feats.astype(cfg.jdtype).mean(axis=1),
+    )  # (B, H)
+    # layer 1 at seeds: aggregate transformed hop-1
+    h = _sage_layer(params["layer1"], h0, h1.mean(axis=1))
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_full_graph(params, feats, edge_index, labels, label_mask, cfg):
+    logits = forward_full_graph(params, feats, edge_index, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ce = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return (ce * label_mask).sum() / jnp.maximum(label_mask.sum(), 1.0)
+
+
+def forward_batched_graphs(
+    params, feats, edge_index, graph_ids, cfg: GNNConfig, n_graphs: int
+):
+    """Batched small graphs (molecule shape): one big disjoint graph, then
+    mean-pool node embeddings per graph via segment_sum → graph logits."""
+    n = feats.shape[0]
+    src, dst = edge_index[0], edge_index[1]
+    deg = jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst, num_segments=n)
+    deg = jnp.maximum(deg, 1.0)[:, None]
+    h = feats.astype(cfg.jdtype)
+    for l in range(cfg.n_layers):
+        msg = jax.ops.segment_sum(h[src], dst, num_segments=n)
+        h = _sage_layer(params[f"layer{l}"], h, (msg / deg).astype(cfg.jdtype))
+    pooled = jax.ops.segment_sum(h, graph_ids, num_segments=n_graphs)
+    sizes = jax.ops.segment_sum(
+        jnp.ones((n,), jnp.float32), graph_ids, num_segments=n_graphs
+    )
+    pooled = pooled / jnp.maximum(sizes, 1.0)[:, None]
+    return pooled @ params["head"]["w"] + params["head"]["b"]
+
+
+def loss_batched_graphs(params, feats, edge_index, graph_ids, labels, cfg, n_graphs):
+    logits = forward_batched_graphs(params, feats, edge_index, graph_ids, cfg, n_graphs)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0].mean()
+
+
+def loss_sampled(params, seed_feats, hop1_feats, hop2_feats, labels, cfg):
+    logits = forward_sampled(params, seed_feats, hop1_feats, hop2_feats, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0].mean()

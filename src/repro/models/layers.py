@@ -1,0 +1,448 @@
+"""Shared neural layers, pure-functional JAX.
+
+Conventions:
+  * params are plain dicts of jnp arrays; every layer fn is
+    ``fn(params, x, cfg) -> y`` with no global state;
+  * activations run in cfg.act_dtype (bf16 by default), softmax / norms /
+    losses accumulate in f32;
+  * attention is chunked (online-softmax / flash-style) — never materializes
+    the full (S × S) score matrix, which is what makes 32k prefill and 4k
+    training shapes fit VMEM/HBM budgets at scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------- norms
+def rms_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+# ----------------------------------------------------------------- rope
+def rope_freqs(dim: int, theta: float = 10_000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float64) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, dim) or (..., S, dim); positions: (..., S)."""
+    dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dim, theta), dtype=jnp.float32)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, dim/2)
+    if x.ndim - angles.ndim == 2:  # head axis present in x
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- blocked attn
+def _expand_kv(x: jax.Array, H: int) -> jax.Array:
+    """(B, S, K, D) → (B, S, H, D): repeat each kv head G = H/K times so the
+    head axis is H everywhere (q head h reads kv head h // G). Keeps the head
+    dimension cleanly shardable over "model" even when K < mesh extent."""
+    B, S, K, D = x.shape
+    if K == H:
+        return x
+    return jnp.repeat(x, H // K, axis=2)
+
+
+def blocked_attention(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Sk, K, Dh)
+    v: jax.Array,  # (B, Sk, K, Dv)
+    *,
+    causal: bool,
+    q_chunk: int = 2048,
+    kv_chunk: int = 2048,
+    scale: float | None = None,
+) -> jax.Array:
+    """Flash-style blocked attention with STATIC python loops.
+
+    Static loops (vs lax.scan) because (a) fully-masked causal blocks are
+    skipped at trace time — the compiled FLOPs are the true ~S²/2 causal
+    cost, and (b) XLA cost analysis counts loop bodies once, which would make
+    the roofline lie. Online softmax keeps the live score block at
+    (B, q_chunk, H, kv_chunk) f32. Returns (B, Sq, H, Dv).
+    """
+    B, Sq, H, Dh = q.shape
+    _, Sk, K, Dv = v.shape
+    scale = Dh ** -0.5 if scale is None else scale
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    qf = q.astype(jnp.float32) * scale
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    n_q = (Sq + q_chunk - 1) // q_chunk
+    n_kv = (Sk + kv_chunk - 1) // kv_chunk
+
+    outs = []
+    for qi in range(n_q):
+        q_lo, q_hi = qi * q_chunk, min((qi + 1) * q_chunk, Sq)
+        qb = qf[:, q_lo:q_hi]
+        m = jnp.full((B, q_hi - q_lo, H), -jnp.inf, jnp.float32)
+        l = jnp.zeros((B, q_hi - q_lo, H), jnp.float32)
+        acc = jnp.zeros((B, q_hi - q_lo, H, Dv), jnp.float32)
+        for ji in range(n_kv):
+            kv_lo, kv_hi = ji * kv_chunk, min((ji + 1) * kv_chunk, Sk)
+            if causal and kv_lo > q_hi - 1:
+                continue  # block entirely in the future — skipped at trace time
+            kb = k[:, kv_lo:kv_hi].astype(jnp.float32)
+            vb = v[:, kv_lo:kv_hi].astype(jnp.float32)
+            s = jnp.einsum(
+                "bqhd,bshd->bqhs", qb, kb, preferred_element_type=jnp.float32
+            )
+            if causal and kv_hi - 1 > q_lo:  # diagonal block: apply the mask
+                mask = (kv_lo + jnp.arange(kv_hi - kv_lo))[None, :] <= (
+                    q_lo + jnp.arange(q_hi - q_lo)
+                )[:, None]
+                s = jnp.where(mask[None, :, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqhs,bshd->bqhd", p, vb, preferred_element_type=jnp.float32
+            )
+            m = m_new
+        outs.append(acc / jnp.maximum(l[..., None], 1e-20))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, Dh)
+    k: jax.Array,  # (B, S, K, Dh)  (full cache)
+    v: jax.Array,  # (B, S, K, Dv)
+    pos: jax.Array,  # scalar: current position (attend to [0, pos])
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token attention against the whole cache (no chunking — the
+    position bound is dynamic, so causal block-skipping cannot help)."""
+    B, _, H, Dh = q.shape
+    S = k.shape[1]
+    scale = Dh ** -0.5 if scale is None else scale
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    s = jnp.einsum(
+        "bqhd,bshd->bqhs", q.astype(jnp.float32) * scale, k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    mask = jnp.arange(S) <= pos
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bqhs,bshd->bqhd", p, v.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------- ffn
+def ffn(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_in"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif kind == "squared_relu":  # Nemotron-4 (Primer)
+        h = jnp.einsum("...d,df->...f", x, params["w_in"])
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    elif kind == "gelu":
+        h = jnp.einsum("...d,df->...f", x, params["w_in"])
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(kind)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"])
+
+
+def init_ffn(key, d_model: int, d_ff: int, kind: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = (2.0 / d_model) ** 0.5
+    s_out = (2.0 / d_ff) ** 0.5
+    p = {
+        "w_in": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = (jax.random.normal(k3, (d_model, d_ff)) * s_in).astype(dtype)
+    return p
+
+
+# ------------------------------------------------------- sharding helper
+def maybe_shard(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint that degrades to a no-op outside a mesh
+    context (CPU unit tests). Each entry of ``axes`` is an axis name, a tuple
+    of names, or None; names absent from the active mesh are dropped."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    avail = set(mesh.axis_names)
+
+    def clean(a):
+        if a is None:
+            return None
+        if isinstance(a, (tuple, list)):
+            kept = tuple(n for n in a if n in avail)
+            return kept if kept else None
+        return a if a in avail else None
+
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, P(*[clean(a) for a in axes]))
+
+
+DATA_AXES = ("pod", "data")  # batch-sharding axes (whichever exist)
+
+
+# ----------------------------------------------------------------- MoE
+def moe_ffn(
+    params: dict,
+    x: jax.Array,  # (B, S, d)
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    expert_kind: str = "swiglu",
+) -> tuple[jax.Array, jax.Array]:
+    """Sort-based capacity-constrained top-k routing, dispatched PER BATCH
+    ROW so the scatter stays local to the batch ("data") shard. The dispatch
+    buffer is then resharded row-sharded → expert-sharded ("model") — i.e.
+    GSPMD inserts exactly the expert-parallel all-to-all — and back after the
+    expert matmuls. Expert weights carry a leading E axis sharded over
+    "model". Returns (y, aux_loss).
+    """
+    B, S, d = x.shape
+    E, k = n_experts, top_k
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # ---- load-balancing aux loss (Switch): E * Σ_e f_e * p_e
+    me = probs.mean(axis=(0, 1))  # (E,)
+    ce = jnp.zeros(E).at[idx.reshape(-1)].add(1.0) / (B * S * k)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- per-row sorted dispatch with fixed per-expert capacity
+    cap = int(np.ceil(S * k / E * capacity_factor))
+    flat_e = idx.reshape(B, S * k)
+    flat_t = jnp.broadcast_to(jnp.arange(S)[:, None], (S, k)).reshape(S * k)
+    flat_g = gate.reshape(B, S * k)
+    order = jnp.argsort(flat_e, axis=-1)  # (B, S*k)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    st = flat_t[order]  # (B, S*k) token index within the row
+    sg = jnp.take_along_axis(flat_g, order, axis=-1)
+    # rank within expert group (se sorted per row)
+    pos = jnp.arange(S * k)[None, :] - jax.vmap(
+        lambda s: jnp.searchsorted(s, s, side="left")
+    )(se)
+    keep = pos < cap
+    bidx = jnp.arange(B)[:, None]
+    buf = jnp.zeros((B, E, cap, d), dtype=x.dtype)
+    buf = buf.at[
+        bidx,
+        jnp.where(keep, se, E - 1),
+        jnp.where(keep, pos, cap - 1),
+    ].add(jnp.where(keep[..., None], jnp.take_along_axis(
+        x, st[..., None], axis=1), 0))
+    # reshard: row-sharded → expert-sharded (the EP all-to-all)
+    buf = maybe_shard(buf, DATA_AXES, "model", None, None)
+
+    # ---- expert computation: (B, E, C, d) × (E, d, f)
+    if expert_kind == "swiglu":
+        g = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+        u = jnp.einsum("becd,edf->becf", buf, params["w_in"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("becd,edf->becf", buf, params["w_in"])
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    y_buf = jnp.einsum("becf,efd->becd", h, params["w_out"])
+    # reshard back: expert-sharded → row-sharded (the return all-to-all)
+    y_buf = maybe_shard(y_buf, DATA_AXES, None, None, None)
+
+    # ---- combine (weighted gather back to tokens; dropped slots add 0)
+    gathered = y_buf[bidx, se, jnp.minimum(pos, cap - 1)]  # (B, S*k, d)
+    contrib = jnp.where(keep[..., None], gathered * sg[..., None].astype(x.dtype), 0)
+    y = jnp.zeros((B, S, d), dtype=jnp.float32).at[bidx, st].add(
+        contrib.astype(jnp.float32)
+    )
+    y = y.astype(x.dtype)
+
+    if "shared" in params:  # DeepSeek shared expert(s), always-on
+        y = y + ffn(params["shared"], x, expert_kind)
+    return y, aux
+
+
+def moe_ffn_ep(
+    params: dict,
+    x: jax.Array,  # (B, S, d) sharded (dp, None, None) or replicated
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    expert_kind: str = "swiglu",
+    combine_dtype=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE with EXPLICIT collectives (shard_map).
+
+    Layout: expert weights (E, d, f) sharded P("model", fsdp, None) — expert
+    parallelism over "model", FSDP over the remaining axes. Activations are
+    replicated over "model", so every model rank can route every local token
+    itself and process only the experts it owns; the only cross-"model"
+    communication is ONE psum of the (B_loc, S, d) combined output per layer
+    (plus the FSDP weight all-gather). No dispatch all-to-all is needed, and
+    no GSPMD reshard guessing (which materializes the dispatch buffer
+    globally — the failure mode this function exists to avoid).
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in (mesh.axis_names or ()):
+        return moe_ffn(
+            params, x, n_experts=n_experts, top_k=top_k,
+            capacity_factor=capacity_factor, expert_kind=expert_kind,
+        )
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    B = x.shape[0]
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    batch_axes = dp if (B % dp_size == 0 and B >= dp_size) else None
+
+    gated = expert_kind == "swiglu"
+
+    def region(x_loc, router, w_in_loc, w_out_loc, w_gate_loc):
+        # x_loc: (B_loc, S, d); w_in_loc: (E_loc, d_loc, f); w_out_loc: (E_loc, f, d_loc)
+        Bl, S, d = x_loc.shape
+        E_loc = w_in_loc.shape[0]
+        rank = jax.lax.axis_index("model")
+        # FSDP gather of this layer's expert weights (transient, one layer live)
+        w_in = jax.lax.all_gather(w_in_loc, dp, axis=1, tiled=True)
+        w_out = jax.lax.all_gather(w_out_loc, dp, axis=2, tiled=True)
+        w_gate = (
+            jax.lax.all_gather(w_gate_loc, dp, axis=1, tiled=True) if gated else None
+        )
+
+        T = Bl * S
+        xt = x_loc.reshape(T, d)
+        logits = (xt @ router).astype(jnp.float32)  # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, idx = jax.lax.top_k(probs, top_k)  # (T, k)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        # aux loss over the GLOBAL batch (psum over dp; model ranks identical)
+        me = probs.mean(axis=0)
+        ce = jnp.zeros(n_experts).at[idx.reshape(-1)].add(1.0) / (T * top_k)
+        aux = n_experts * jnp.sum(me * ce)
+        if dp and batch_axes is not None:
+            # tokens shard over dp → aux is dp-varying → average the shards
+            aux = jax.lax.pmean(aux, dp)
+
+        # sorted local dispatch, restricted to the experts this rank owns
+        cap = int(np.ceil(T * top_k / n_experts * capacity_factor))
+        flat_e = idx.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(T), top_k)
+        flat_g = gate.reshape(-1)
+        order = jnp.argsort(flat_e)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        pos = jnp.arange(T * top_k) - jnp.searchsorted(se, se, side="left")
+        se_loc = se - rank * E_loc
+        keep = (pos < cap) & (se_loc >= 0) & (se_loc < E_loc)
+        buf = jnp.zeros((E_loc, cap, d), dtype=x_loc.dtype)
+        buf = buf.at[
+            jnp.where(keep, se_loc, E_loc - 1),
+            jnp.where(keep, pos, cap - 1),
+        ].add(jnp.where(keep[:, None], xt[st], 0))
+
+        if gated:
+            g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+            u = jnp.einsum("ecd,edf->ecf", buf, w_in)
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(x_loc.dtype) * u
+        else:
+            h = jnp.einsum("ecd,edf->ecf", buf, w_in)
+            h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x_loc.dtype)
+        y_buf = jnp.einsum("ecf,efd->ecd", h, w_out)
+
+        # combine: map (expert, slot) back to (token, k) via the inverse
+        # permutation and GATHER — no scatter-add, no f32 (T·k, d) buffers;
+        # the weighted k-sum accumulates in f32 inside one einsum
+        inv = jnp.zeros_like(order).at[order].set(jnp.arange(T * top_k))
+        pos_tok = pos[inv].reshape(T, top_k)
+        se_loc_tok = idx - rank * E_loc  # (T, k)
+        keep_tok = (pos_tok < cap) & (se_loc_tok >= 0) & (se_loc_tok < E_loc)
+        vals = y_buf[
+            jnp.clip(se_loc_tok, 0, E_loc - 1), jnp.clip(pos_tok, 0, cap - 1)
+        ]  # (T, k, d)
+        w = jnp.where(keep_tok, gate, 0.0)
+        y = jnp.einsum("tkd,tk->td", vals, w, preferred_element_type=jnp.float32)
+        if combine_dtype is not None:
+            y = y.astype(combine_dtype)  # §Perf: halve the psum wire bytes
+        # combine across expert owners: the ONE cross-"model" collective
+        y = jax.lax.psum(y, "model")
+        if batch_axes is None and dp:
+            # replicated-batch path (B < dp extent, e.g. B=1 decode): y is
+            # numerically identical on every dp rank but typed dp-varying
+            # (it flows through dp-gathered weights) — pmean renormalizes the
+            # type; the payload is a single token (~KBs)
+            y = jax.lax.pmean(y, dp)
+        return y.reshape(Bl, S, d).astype(x_loc.dtype), aux
+
+    w_gate = params.get("w_gate", params["w_in"][:, :, :0])  # dummy when ungated
+    y, aux = jax.shard_map(
+        region,
+        mesh=mesh,
+        in_specs=(
+            P(batch_axes, None, None),
+            P(None, None),
+            P("model", dp, None),
+            P("model", None, dp),
+            P("model", dp, None),
+        ),
+        out_specs=(P(batch_axes, None, None), P()),
+    )(x, params["router"], params["w_in"], params["w_out"], w_gate)
+
+    if "shared" in params:
+        y = y + ffn(params["shared"], x, expert_kind)
+    return y, aux
+
+
+def init_moe(
+    key,
+    d_model: int,
+    expert_d_ff: int,
+    n_experts: int,
+    n_shared: int,
+    kind: str,
+    dtype,
+) -> dict:
+    ks = jax.random.split(key, 5)
+    s_in = (2.0 / d_model) ** 0.5
+    s_out = (2.0 / expert_d_ff) ** 0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, n_experts)) * s_in).astype(
+            jnp.float32
+        ),
+        "w_in": (
+            jax.random.normal(ks[1], (n_experts, d_model, expert_d_ff)) * s_in
+        ).astype(dtype),
+        "w_out": (
+            jax.random.normal(ks[2], (n_experts, expert_d_ff, d_model)) * s_out
+        ).astype(dtype),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = (
+            jax.random.normal(ks[3], (n_experts, d_model, expert_d_ff)) * s_in
+        ).astype(dtype)
+    if n_shared:
+        p["shared"] = init_ffn(ks[4], d_model, expert_d_ff * n_shared, kind, dtype)
+    return p

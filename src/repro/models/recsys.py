@@ -1,0 +1,500 @@
+"""Recsys rankers: DIEN, BERT4Rec, xDeepFM, BST.
+
+The hot path is the sparse embedding lookup. JAX has no native EmbeddingBag,
+so it is built here from ``jnp.take`` + masked segment reduction
+(``embedding_bag``) — single-hot fields use plain take, multi-hot fields go
+through the bag. Tables are stored as ONE concatenated (total_rows, dim)
+matrix with per-field offsets so that row-sharding over the "model" axis
+gives balanced expert-style embedding parallelism.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import blocked_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str                     # "dien" | "bert4rec" | "xdeepfm" | "bst"
+    n_items: int = 0
+    n_cats: int = 0
+    embed_dim: int = 32
+    seq_len: int = 20
+    # dien
+    gru_dim: int = 0
+    # bert4rec / bst
+    n_blocks: int = 0
+    n_heads: int = 0
+    n_masked: int = 10            # masked positions per sequence (bert4rec)
+    # xdeepfm
+    field_vocabs: tuple = ()      # per-field vocab sizes (single-hot first)
+    n_multi_hot: int = 0          # last n fields are multi-hot bags
+    max_bag: int = 8
+    cin_layers: tuple = ()
+    mlp: tuple = ()
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.field_vocabs)
+
+
+# --------------------------------------------------------------------------
+# EmbeddingBag substrate
+# --------------------------------------------------------------------------
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Plain row gather; ids < 0 return zeros."""
+    safe = jnp.maximum(ids, 0)
+    out = jnp.take(table, safe, axis=0)
+    return jnp.where((ids >= 0)[..., None], out, 0)
+
+
+def embedding_bag(
+    table: jax.Array, ids: jax.Array, mode: str = "sum"
+) -> jax.Array:
+    """EmbeddingBag: ids (..., L) with -1 padding → (..., dim) reduction.
+    take + masked sum ≡ torch.nn.EmbeddingBag(mode=sum/mean)."""
+    vecs = embedding_lookup(table, ids)  # (..., L, dim)
+    s = vecs.sum(axis=-2)
+    if mode == "sum":
+        return s
+    n = jnp.maximum((ids >= 0).sum(axis=-1, keepdims=True), 1)
+    return s / n
+
+
+def _mlp(params: Sequence[dict], x: jax.Array, final_linear: bool = True) -> jax.Array:
+    n = len(params)
+    for i, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        if i < n - 1 or not final_linear:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _init_linear(key, d_in, d_out, dtype):
+    return {
+        "w": (jax.random.normal(key, (d_in, d_out)) * (1.0 / d_in) ** 0.5).astype(dtype),
+        "b": jnp.zeros((d_out,), dtype),
+    }
+
+
+def _init_mlp(key, dims: Sequence[int], dtype):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [
+        _init_linear(k, dims[i], dims[i + 1], dtype) for i, k in enumerate(keys)
+    ]
+
+
+# --------------------------------------------------------------------------
+# GRU / AUGRU (DIEN)
+# --------------------------------------------------------------------------
+def _init_gru(key, d_in, d_hidden, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    si, sh = (1.0 / d_in) ** 0.5, (1.0 / d_hidden) ** 0.5
+    return {
+        "wx": (jax.random.normal(k1, (d_in, 3 * d_hidden)) * si).astype(dtype),
+        "wh": (jax.random.normal(k2, (d_hidden, 3 * d_hidden)) * sh).astype(dtype),
+        "b": jnp.zeros((3 * d_hidden,), dtype),
+    }
+
+
+def _gru_gates(p, x, h):
+    gx = x @ p["wx"] + p["b"]
+    gh = h @ p["wh"]
+    xz, xr, xn = jnp.split(gx, 3, axis=-1)
+    hz, hr, hn = jnp.split(gh, 3, axis=-1)
+    z = jax.nn.sigmoid(xz + hz)
+    r = jax.nn.sigmoid(xr + hr)
+    n = jnp.tanh(xn + r * hn)
+    return z, n
+
+
+def gru(p: dict, xs: jax.Array) -> jax.Array:
+    """xs: (B, T, d_in) → states (B, T, d_hidden)."""
+    B = xs.shape[0]
+    H = p["wh"].shape[0]
+
+    def step(h, x):
+        z, n = _gru_gates(p, x, h)
+        h = (1 - z) * n + z * h
+        return h, h
+
+    h0 = jnp.zeros((B, H), xs.dtype)
+    _, hs = jax.lax.scan(step, h0, jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def augru(p: dict, xs: jax.Array, att: jax.Array) -> jax.Array:
+    """Attentional-update GRU (DIEN): update gate scaled by attention score.
+    xs: (B, T, d_in); att: (B, T) in [0,1]. Returns final state (B, H)."""
+    B = xs.shape[0]
+    H = p["wh"].shape[0]
+
+    def step(h, xa):
+        x, a = xa
+        z, n = _gru_gates(p, x, h)
+        z = z * a[:, None]
+        h = (1 - z) * h + z * n
+        return h, None
+
+    h0 = jnp.zeros((B, H), xs.dtype)
+    h, _ = jax.lax.scan(
+        step, h0, (jnp.swapaxes(xs, 0, 1), jnp.swapaxes(att, 0, 1))
+    )
+    return h
+
+
+# --------------------------------------------------------------------------
+# DIEN
+# --------------------------------------------------------------------------
+def dien_param_shapes(cfg: RecsysConfig) -> dict:
+    e, g = cfg.embed_dim, cfg.gru_dim
+    d_in = 2 * e  # item ⊕ category
+    mlp_dims = (g + 3 * d_in,) + tuple(cfg.mlp) + (1,)
+    return {
+        "item_embed": (cfg.n_items, e),
+        "cat_embed": (cfg.n_cats, e),
+        "gru": {"wx": (d_in, 3 * g), "wh": (g, 3 * g), "b": (3 * g,)},
+        "augru": {"wx": (d_in, 3 * g), "wh": (g, 3 * g), "b": (3 * g,)},
+        "att_w": (g, d_in),
+        "mlp": [
+            {"w": (mlp_dims[i], mlp_dims[i + 1]), "b": (mlp_dims[i + 1],)}
+            for i in range(len(mlp_dims) - 1)
+        ],
+        "user_proj": (g, e),  # retrieval tower head
+    }
+
+
+def dien_forward(params, batch, cfg: RecsysConfig):
+    """batch: hist_items/hist_cats (B, T) (−1 pad), target_item/target_cat (B,)."""
+    hist = jnp.concatenate(
+        [
+            embedding_lookup(params["item_embed"], batch["hist_items"]),
+            embedding_lookup(params["cat_embed"], batch["hist_cats"]),
+        ],
+        axis=-1,
+    )  # (B, T, 2e)
+    tgt = jnp.concatenate(
+        [
+            embedding_lookup(params["item_embed"], batch["target_item"]),
+            embedding_lookup(params["cat_embed"], batch["target_cat"]),
+        ],
+        axis=-1,
+    )  # (B, 2e)
+    states = gru(params["gru"], hist)  # (B, T, g)
+    att = jax.nn.sigmoid(
+        jnp.einsum("btg,ge,be->bt", states, params["att_w"], tgt)
+    )
+    mask = batch["hist_items"] >= 0
+    att = att * mask
+    final = augru(params["augru"], hist, att)  # (B, g)
+    hist_sum = embedding_bag(params["item_embed"], batch["hist_items"])
+    hist_sum = jnp.concatenate(
+        [hist_sum, embedding_bag(params["cat_embed"], batch["hist_cats"])], -1
+    )
+    x = jnp.concatenate([final, tgt, hist_sum, tgt * hist_sum], axis=-1)
+    return _mlp(params["mlp"], x)[:, 0]  # logits (B,)
+
+
+def dien_user_vector(params, batch, cfg):
+    """Two-tower retrieval head: AUGRU state → item-embedding space."""
+    hist = jnp.concatenate(
+        [
+            embedding_lookup(params["item_embed"], batch["hist_items"]),
+            embedding_lookup(params["cat_embed"], batch["hist_cats"]),
+        ],
+        axis=-1,
+    )
+    states = gru(params["gru"], hist)
+    att = jnp.ones(batch["hist_items"].shape, states.dtype) * (
+        batch["hist_items"] >= 0
+    )
+    final = augru(params["augru"], hist, att)
+    return final @ params["user_proj"]
+
+
+# --------------------------------------------------------------------------
+# BERT4Rec
+# --------------------------------------------------------------------------
+def bert4rec_param_shapes(cfg: RecsysConfig) -> dict:
+    e = cfg.embed_dim
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append(
+            {
+                "ln1": (e,), "ln2": (e,),
+                "wq": (e, e), "wk": (e, e), "wv": (e, e), "wo": (e, e),
+                "w_in": (e, 4 * e), "w_out": (4 * e, e),
+                "b_in": (4 * e,), "b_out": (e,),
+            }
+        )
+    return {
+        # +1 row: the [MASK] token
+        "item_embed": (cfg.n_items + 1, e),
+        "pos_embed": (cfg.seq_len, e),
+        "blocks": blocks,
+        "final_ln": (e,),
+    }
+
+
+def _bert_block(p, h, n_heads):
+    from repro.models.layers import rms_norm
+
+    B, S, e = h.shape
+    dh = e // n_heads
+    x = rms_norm(p["ln1"], h)
+    q = (x @ p["wq"]).reshape(B, S, n_heads, dh)
+    k = (x @ p["wk"]).reshape(B, S, n_heads, dh)
+    v = (x @ p["wv"]).reshape(B, S, n_heads, dh)
+    o = blocked_attention(q, k, v, causal=False, q_chunk=S, kv_chunk=S)
+    h = h + o.reshape(B, S, e) @ p["wo"]
+    x = rms_norm(p["ln2"], h)
+    x = jax.nn.gelu(x @ p["w_in"] + p["b_in"])
+    return h + x @ p["w_out"] + p["b_out"]
+
+
+def bert4rec_encode(params, items, cfg: RecsysConfig):
+    """items: (B, S) with −1 pad; [MASK] = n_items. Bidirectional encoder."""
+    from repro.models.layers import rms_norm
+
+    h = embedding_lookup(params["item_embed"], items) + params["pos_embed"]
+    for p in params["blocks"]:
+        h = _bert_block(p, h, cfg.n_heads)
+    return rms_norm(params["final_ln"], h)  # (B, S, e)
+
+
+def bert4rec_logits(params, items, positions, cfg: RecsysConfig):
+    """Scores over the full item vocab at the given (B, M) positions —
+    weight-tied output head (h @ E^T)."""
+    h = bert4rec_encode(params, items, cfg)
+    hm = jnp.take_along_axis(h, positions[..., None], axis=1)  # (B, M, e)
+    return jnp.einsum(
+        "bme,ve->bmv", hm, params["item_embed"][: cfg.n_items],
+        preferred_element_type=jnp.float32,
+    )
+
+
+# --------------------------------------------------------------------------
+# xDeepFM
+# --------------------------------------------------------------------------
+def xdeepfm_param_shapes(cfg: RecsysConfig) -> dict:
+    total_rows = int(sum(cfg.field_vocabs))
+    F, D = cfg.n_fields, cfg.embed_dim
+    cin = []
+    h_prev = F
+    for h in cfg.cin_layers:
+        cin.append({"w": (h_prev * F, h)})
+        h_prev = h
+    mlp_dims = (F * D,) + tuple(cfg.mlp) + (1,)
+    return {
+        "embed": (total_rows, D),
+        "linear": (total_rows,),
+        "cin": cin,
+        "cin_head": (int(sum(cfg.cin_layers)), 1),
+        "mlp": [
+            {"w": (mlp_dims[i], mlp_dims[i + 1]), "b": (mlp_dims[i + 1],)}
+            for i in range(len(mlp_dims) - 1)
+        ],
+    }
+
+
+def _xdeepfm_field_offsets(cfg: RecsysConfig) -> np.ndarray:
+    return np.concatenate([[0], np.cumsum(cfg.field_vocabs)[:-1]]).astype(np.int32)
+
+
+def xdeepfm_embed(params, batch, cfg: RecsysConfig):
+    """batch: single_ids (B, F_single), multi_ids (B, F_multi, max_bag).
+    Returns (B, F, D) field embeddings + (B,) linear term."""
+    offs = jnp.asarray(_xdeepfm_field_offsets(cfg))
+    n_single = cfg.n_fields - cfg.n_multi_hot
+    sid = batch["single_ids"] + offs[:n_single]
+    e_single = embedding_lookup(params["embed"], sid)  # (B, Fs, D)
+    lin = embedding_lookup(params["linear"][:, None], sid)[..., 0].sum(-1)
+    if cfg.n_multi_hot:
+        moffs = offs[n_single:]
+        mid = jnp.where(
+            batch["multi_ids"] >= 0, batch["multi_ids"] + moffs[:, None], -1
+        )
+        e_multi = embedding_bag(params["embed"], mid, mode="mean")  # (B, Fm, D)
+        lin = lin + embedding_bag(params["linear"][:, None], mid, "sum")[..., 0].sum(-1)
+        e = jnp.concatenate([e_single, e_multi], axis=1)
+    else:
+        e = e_single
+    return e, lin
+
+
+def _cin(params, x0: jax.Array) -> jax.Array:
+    """Compressed Interaction Network: explicit vector-wise crosses.
+    x0: (B, F, D) → concat of per-layer sum-pools (B, Σh)."""
+    pools = []
+    xk = x0
+    for layer in params:
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)  # (B, Hk, F, D)
+        B, Hk, F, D = z.shape
+        xk = jnp.einsum("bqd,qh->bhd", z.reshape(B, Hk * F, D), layer["w"])
+        pools.append(xk.sum(axis=-1))  # (B, Hk+1)
+    return jnp.concatenate(pools, axis=-1)
+
+
+def xdeepfm_forward(params, batch, cfg: RecsysConfig):
+    e, lin = xdeepfm_embed(params, batch, cfg)  # (B, F, D)
+    cin_out = _cin(params["cin"], e) @ params["cin_head"]  # (B, 1)
+    B = e.shape[0]
+    dnn_out = _mlp(params["mlp"], e.reshape(B, -1))  # (B, 1)
+    return lin + cin_out[:, 0] + dnn_out[:, 0]  # logits (B,)
+
+
+# --------------------------------------------------------------------------
+# BST (Behavior Sequence Transformer)
+# --------------------------------------------------------------------------
+def bst_param_shapes(cfg: RecsysConfig) -> dict:
+    e = cfg.embed_dim
+    S = cfg.seq_len + 1  # history + target item
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append(
+            {
+                "ln1": (e,), "ln2": (e,),
+                "wq": (e, e), "wk": (e, e), "wv": (e, e), "wo": (e, e),
+                "w_in": (e, 4 * e), "w_out": (4 * e, e),
+                "b_in": (4 * e,), "b_out": (e,),
+            }
+        )
+    mlp_dims = (S * e,) + tuple(cfg.mlp) + (1,)
+    return {
+        "item_embed": (cfg.n_items, e),
+        "pos_embed": (S, e),
+        "blocks": blocks,
+        "mlp": [
+            {"w": (mlp_dims[i], mlp_dims[i + 1]), "b": (mlp_dims[i + 1],)}
+            for i in range(len(mlp_dims) - 1)
+        ],
+        "user_proj": (e, e),
+    }
+
+
+def bst_forward(params, batch, cfg: RecsysConfig):
+    """batch: hist_items (B, S), target_item (B,) → logits (B,)."""
+    seq = jnp.concatenate(
+        [batch["hist_items"], batch["target_item"][:, None]], axis=1
+    )
+    h = embedding_lookup(params["item_embed"], seq) + params["pos_embed"]
+    for p in params["blocks"]:
+        h = _bert_block(p, h, cfg.n_heads)
+    B = h.shape[0]
+    return _mlp(params["mlp"], h.reshape(B, -1))[:, 0]
+
+
+def bst_user_vector(params, batch, cfg: RecsysConfig):
+    h = embedding_lookup(params["item_embed"], batch["hist_items"]) + params[
+        "pos_embed"
+    ][: cfg.seq_len]
+    for p in params["blocks"]:
+        h = _bert_block(p, h, cfg.n_heads)
+    return h.mean(axis=1) @ params["user_proj"]
+
+
+# --------------------------------------------------------------------------
+# shared: init, losses, retrieval
+# --------------------------------------------------------------------------
+PARAM_SHAPE_FNS = {
+    "dien": dien_param_shapes,
+    "bert4rec": bert4rec_param_shapes,
+    "xdeepfm": xdeepfm_param_shapes,
+    "bst": bst_param_shapes,
+}
+
+FORWARD_FNS = {
+    "dien": dien_forward,
+    "xdeepfm": xdeepfm_forward,
+    "bst": bst_forward,
+}
+
+
+def param_shapes(cfg: RecsysConfig) -> dict:
+    return PARAM_SHAPE_FNS[cfg.kind](cfg)
+
+
+def init_params(key: jax.Array, cfg: RecsysConfig) -> dict:
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for (path, shape), k in zip(flat, keys):
+        name = getattr(path[-1], "key", "")
+        if name in ("b", "b_in", "b_out", "linear") or "ln" in str(name):
+            if "ln" in str(name) and "linear" != name:
+                leaves.append(jnp.ones(shape, cfg.jdtype))
+            else:
+                leaves.append(jnp.zeros(shape, cfg.jdtype))
+        else:
+            fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+            scale = min((1.0 / max(fan_in, 1)) ** 0.5, 0.05)
+            leaves.append((jax.random.normal(k, shape) * scale).astype(cfg.jdtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def pointwise_loss(params, batch, cfg: RecsysConfig) -> jax.Array:
+    """BCE-with-logits (dien / xdeepfm / bst click prediction)."""
+    logits = FORWARD_FNS[cfg.kind](params, batch, cfg).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def masked_item_loss(params, batch, cfg: RecsysConfig) -> jax.Array:
+    """BERT4Rec masked-item cross-entropy over the full item softmax."""
+    logits = bert4rec_logits(params, batch["items"], batch["positions"], cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)[..., 0]
+    mask = (batch["labels"] >= 0).astype(jnp.float32)
+    return (ce * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, batch, cfg: RecsysConfig) -> jax.Array:
+    if cfg.kind == "bert4rec":
+        return masked_item_loss(params, batch, cfg)
+    return pointwise_loss(params, batch, cfg)
+
+
+def retrieval_scores(params, batch, cand_ids: jax.Array, cfg: RecsysConfig):
+    """Score ONE user context against n_candidates items: batched dot of the
+    user vector with gathered candidate embeddings (never a loop). xDeepFM is
+    not a two-tower model — its retrieval IS the full forward with the
+    candidate field varying (still one batched pass)."""
+    if cfg.kind == "xdeepfm":
+        C = cand_ids.shape[0]
+        wide = {
+            "single_ids": jnp.broadcast_to(
+                batch["single_ids"], (C,) + batch["single_ids"].shape[1:]
+            ).at[:, 0].set(cand_ids),
+            "multi_ids": jnp.broadcast_to(
+                batch["multi_ids"], (C,) + batch["multi_ids"].shape[1:]
+            ),
+        }
+        return xdeepfm_forward(params, wide, cfg)
+    if cfg.kind == "bert4rec":
+        h = bert4rec_encode(params, batch["items"], cfg)[:, -1]  # (1, e)
+        u = h[0]
+    elif cfg.kind == "dien":
+        u = dien_user_vector(params, batch, cfg)[0]
+    else:  # bst
+        u = bst_user_vector(params, batch, cfg)[0]
+    table = params["item_embed"]
+    cands = jnp.take(table, jnp.minimum(cand_ids, table.shape[0] - 1), axis=0)
+    return jnp.einsum("e,ce->c", u, cands, preferred_element_type=jnp.float32)

@@ -1,0 +1,547 @@
+"""LM transformer family: GQA/MLA attention, dense/MoE FFN, optional MTP.
+
+Covers the five assigned LM architectures (deepseek-v3-671b, olmoe-1b-7b,
+qwen1.5-110b, minicpm3-4b, nemotron-4-340b) from one config dataclass.
+
+Structure: pre-RMSNorm blocks, scanned over layers (weights stacked with a
+leading L axis → small HLO, fast SPMD partitioning, remat-friendly), tied
+flash-style chunked attention for train/prefill and absorbed-MLA or
+cached-GQA attention for decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (
+    apply_rope,
+    blocked_attention,
+    decode_attention,
+    ffn,
+    init_ffn,
+    init_moe,
+    moe_ffn_ep,
+    rms_norm,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+    attn: str = "gqa"               # "gqa" | "mla"
+    qkv_bias: bool = False          # Qwen1.5
+    qk_norm: bool = False           # OLMoE
+    ffn_kind: str = "swiglu"        # "swiglu" | "squared_relu" | "gelu"
+    # MoE (n_experts == 0 → dense FFN)
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # MLA
+    q_lora_rank: int = 0            # 0 → direct q projection
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # MTP (DeepSeek-V3)
+    mtp: bool = False
+    mtp_weight: float = 0.3
+    rope_theta: float = 10_000.0
+    dtype: str = "float32"          # params + activations
+    kv_chunk: int = 1024            # flash-attention chunk
+    remat: bool = True
+    # dry-run: fully unroll the layer scan so compiled.cost_analysis() counts
+    # every layer (XLA cost analysis counts while-loop bodies ONCE)
+    unroll_layers: bool = False
+    # §Perf knobs (EXPERIMENTS.md): d_model-sharded decode activations
+    # (2D tensor-parallel serving — stops GSPMD from all-gathering FSDP
+    # weight shards per decoded token), and reduced-precision MoE combine
+    shard_decode_dmodel: bool = False
+    moe_combine_dtype: str = "float32"
+    # ZeRO-3 semantics: constrain each layer's weights to (replicated, model)
+    # at their use point so GSPMD all-gathers the small FSDP shard instead of
+    # all-reducing (B,S,ff)-sized partial matmul outputs
+    zero3_gather_weights: bool = False
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def moe(self) -> bool:
+        return self.n_experts > 0
+
+    def num_params(self) -> int:
+        """Analytic parameter count (for 6ND roofline bookkeeping)."""
+        leaves = jax.tree.leaves(
+            param_shapes(self), is_leaf=lambda x: isinstance(x, tuple)
+        )
+        return sum(int(np.prod(s)) for s in leaves)
+
+    def num_active_params(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        total = self.num_params()
+        if not self.moe:
+            return total
+        shapes = param_shapes(self)
+        expert = sum(
+            int(np.prod(shapes["layers"][k]))
+            for k in ("moe_w_in", "moe_w_out", "moe_w_gate")
+            if k in shapes["layers"]
+        )
+        active = expert * (self.top_k / self.n_experts)
+        return int(total - expert + active)
+
+
+# --------------------------------------------------------------------------
+# parameter shapes / init
+# --------------------------------------------------------------------------
+def _layer_shapes(cfg: LMConfig) -> dict:
+    d, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    s: dict = {"ln1": (d,), "ln2": (d,)}
+    if cfg.attn == "gqa":
+        s.update(
+            wq=(d, H * Dh), wk=(d, K * Dh), wv=(d, K * Dh), wo=(H * Dh, d)
+        )
+        if cfg.qkv_bias:
+            s.update(bq=(H * Dh,), bk=(K * Dh,), bv=(K * Dh,))
+        if cfg.qk_norm:
+            s.update(q_norm=(Dh,), k_norm=(Dh,))
+    else:  # mla
+        r, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+        nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        if qr:
+            s.update(w_dq=(d, qr), q_ln=(qr,), w_uq=(qr, H * (nope + rope)))
+        else:
+            s.update(w_uq=(d, H * (nope + rope)))
+        s.update(
+            w_dkv=(d, r),
+            kv_ln=(r,),
+            w_kr=(d, rope),
+            w_uk=(r, H * nope),
+            w_uv=(r, H * vd),
+            wo=(H * vd, d),
+        )
+    if cfg.moe:
+        e, eff = cfg.n_experts, cfg.expert_d_ff
+        s.update(
+            router=(d, e),
+            moe_w_in=(e, d, eff),
+            moe_w_out=(e, eff, d),
+        )
+        if cfg.ffn_kind == "swiglu":
+            s["moe_w_gate"] = (e, d, eff)
+        if cfg.n_shared_experts:
+            sff = eff * cfg.n_shared_experts
+            s.update(sh_w_in=(d, sff), sh_w_out=(sff, d))
+            if cfg.ffn_kind == "swiglu":
+                s["sh_w_gate"] = (d, sff)
+    else:
+        s.update(w_in=(d, cfg.d_ff), w_out=(cfg.d_ff, d))
+        if cfg.ffn_kind == "swiglu":
+            s["w_gate"] = (d, cfg.d_ff)
+    return s
+
+
+def param_shapes(cfg: LMConfig) -> dict:
+    L = cfg.n_layers
+    layer = {k: (L, *v) for k, v in _layer_shapes(cfg).items()}
+    shapes = {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "layers": layer,
+        "final_ln": (cfg.d_model,),
+        "out_head": (cfg.d_model, cfg.vocab_size),
+    }
+    if cfg.mtp:
+        shapes["mtp"] = {
+            "proj": (2 * cfg.d_model, cfg.d_model),
+            "ln_h": (cfg.d_model,),
+            "ln_e": (cfg.d_model,),
+            "block": {k: (1, *v) for k, v in _layer_shapes(cfg).items()},
+        }
+    return shapes
+
+
+def init_params(key: jax.Array, cfg: LMConfig) -> dict:
+    """Random init matching param_shapes. Norm scales start at 1."""
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree.flatten_with_path(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for (path, shape), k in zip(flat, keys):
+        name = getattr(path[-1], "key", str(path[-1]))
+        if "ln" in name or "norm" in name:
+            leaves.append(jnp.ones(shape, dtype=cfg.jdtype))
+        elif name in ("bq", "bk", "bv"):
+            leaves.append(jnp.zeros(shape, dtype=cfg.jdtype))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            scale = (1.0 / max(fan_in, 1)) ** 0.5
+            leaves.append(
+                (jax.random.normal(k, shape) * scale).astype(cfg.jdtype)
+            )
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def _gqa_qkv(p: dict, x: jax.Array, cfg: LMConfig, positions: jax.Array):
+    B, S, _ = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, K, Dh)
+    v = v.reshape(B, S, K, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(p, x, cfg: LMConfig, positions):
+    q, k, v = _gqa_qkv(p, x, cfg, positions)
+    o = blocked_attention(
+        q, k, v, causal=True, q_chunk=cfg.kv_chunk, kv_chunk=cfg.kv_chunk
+    )
+    B, S = x.shape[:2]
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["wo"]), (k, v)
+
+
+def gqa_decode(p, x, cfg: LMConfig, cache: dict, pos):
+    """x: (B, 1, d); cache: {"k": (B, S, K, Dh), "v": ...}; pos: scalar."""
+    B = x.shape[0]
+    q, k_new, v_new = _gqa_qkv(p, x, cfg, positions=pos[None])
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+    o = decode_attention(q, k, v, pos)
+    return (
+        jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, -1), p["wo"]),
+        {"k": k, "v": v},
+    )
+
+
+def _mla_q(p, x, cfg: LMConfig, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = rms_norm(p["q_ln"], jnp.einsum("bsd,dr->bsr", x, p["w_dq"]))
+        q = jnp.einsum("bsr,rh->bsh", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, p["w_uq"])
+    q = q.reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(p, x, cfg: LMConfig, positions):
+    """Prefill/train MLA: explicit up-projection, flash-chunked attention."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    ckv = rms_norm(p["kv_ln"], jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]))
+    kr = apply_rope(jnp.einsum("bsd,dr->bsr", x, p["w_kr"]), positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsr,rh->bsh", ckv, p["w_uk"]).reshape(B, S, H, nope)
+    v = jnp.einsum("bsr,rh->bsh", ckv, p["w_uv"]).reshape(B, S, H, vd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, rope))], axis=-1
+    )
+    o = blocked_attention(
+        q, k, v, causal=True, q_chunk=cfg.kv_chunk, kv_chunk=cfg.kv_chunk,
+        scale=(nope + rope) ** -0.5,
+    )
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, S, -1), p["wo"])
+    return out, (ckv, kr)
+
+
+def mla_decode(p, x, cfg: LMConfig, cache: dict, pos):
+    """Absorbed-MLA decode: attention entirely in the compressed latent space
+    (never materializes per-position K/V — O(S·r) cache reads, which is what
+    makes the 500k-token decode shape feasible)."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    nope, rope, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, x, cfg, positions=pos[None])  # (B,1,H,·)
+    ckv_new = rms_norm(p["kv_ln"], jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]))
+    kr_new = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, p["w_kr"]), pos[None], cfg.rope_theta
+    )
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0)
+    )
+    kr = jax.lax.dynamic_update_slice(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), (0, pos, 0)
+    )
+    # absorb W_uk into q: q_eff[b,h,r] = Σ_n q_nope[b,h,n] · W_uk[r, h, n]
+    w_uk = p["w_uk"].reshape(r, H, nope)
+    q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)
+    scale = (nope + rope) ** -0.5
+    s = (
+        jnp.einsum("bqhr,bsr->bhqs", q_eff.astype(jnp.float32), ckv.astype(jnp.float32))
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32), kr.astype(jnp.float32))
+    ) * scale
+    S_max = ckv.shape[1]
+    mask = jnp.arange(S_max) <= pos
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", pattn, ckv.astype(jnp.float32))  # latent ctx
+    w_uv = p["w_uv"].reshape(r, H, vd)
+    o = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, -1), p["wo"])
+    return out, {"ckv": ckv, "kr": kr}
+
+
+# --------------------------------------------------------------------------
+# transformer blocks
+# --------------------------------------------------------------------------
+def _ffn_part(p: dict, h: jax.Array, cfg: LMConfig):
+    if cfg.moe:
+        moe_params = {
+            "router": p["router"],
+            "w_in": p["moe_w_in"],
+            "w_out": p["moe_w_out"],
+        }
+        if "moe_w_gate" in p:
+            moe_params["w_gate"] = p["moe_w_gate"]
+        if "sh_w_in" in p:
+            moe_params["shared"] = {
+                k.replace("sh_", ""): p[k]
+                for k in ("sh_w_in", "sh_w_out", "sh_w_gate")
+                if k in p
+            }
+        import jax.numpy as _jnp
+
+        return moe_ffn_ep(
+            moe_params,
+            h,
+            n_experts=cfg.n_experts,
+            top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor,
+            expert_kind=cfg.ffn_kind,
+            combine_dtype=(
+                None if cfg.moe_combine_dtype == "float32"
+                else _jnp.dtype(cfg.moe_combine_dtype)
+            ),
+        )
+    return ffn(p, h, cfg.ffn_kind), jnp.zeros((), jnp.float32)
+
+
+# weight-name → model-parallel dim position (for the ZeRO-3 use-point gather)
+_Z3_IN = ("wq", "wk", "wv", "w_in", "w_gate", "w_uq", "w_uk", "w_uv",
+          "sh_w_in", "sh_w_gate")  # (d_in, X·model)
+_Z3_OUT = ("wo", "w_out", "sh_w_out")  # (X·model, d_out)
+_Z3_REP = ("w_dq", "w_dkv", "w_kr")  # no model dim → fully gathered
+
+
+def _zero3(p: dict, cfg: LMConfig) -> dict:
+    """At the use point, constrain this layer's FSDP-sharded weights back to
+    (replicated-over-data, model-sharded). GSPMD then emits ONE all-gather of
+    the small weight shard per layer instead of all-reducing activation-sized
+    partial-contraction outputs (the ZeRO-3 schedule)."""
+    if not cfg.zero3_gather_weights:
+        return p
+    from repro.models.layers import maybe_shard
+
+    out = {}
+    for k, v in p.items():
+        if k in _Z3_IN:
+            out[k] = maybe_shard(v, None, "model")
+        elif k in _Z3_OUT:
+            out[k] = maybe_shard(v, "model", None)
+        elif k in _Z3_REP:
+            out[k] = maybe_shard(v, None, None)
+        else:
+            out[k] = v
+    return out
+
+
+def block(p: dict, h: jax.Array, cfg: LMConfig, positions):
+    p = _zero3(p, cfg)
+    attn_fn = mla_attention if cfg.attn == "mla" else gqa_attention
+    a, _ = attn_fn(p, rms_norm(p["ln1"], h), cfg, positions)
+    h = h + a
+    f, aux = _ffn_part(p, rms_norm(p["ln2"], h), cfg)
+    return h + f, aux
+
+
+def block_decode(p: dict, h: jax.Array, cfg: LMConfig, cache: dict, pos):
+    p = _zero3(p, cfg)
+    dec_fn = mla_decode if cfg.attn == "mla" else gqa_decode
+    a, cache = dec_fn(p, rms_norm(p["ln1"], h), cfg, cache, pos)
+    h = h + a
+    f, _ = _ffn_part(p, rms_norm(p["ln2"], h), cfg)
+    return h + f, cache
+
+
+# --------------------------------------------------------------------------
+# full model
+# --------------------------------------------------------------------------
+def forward(params: dict, tokens: jax.Array, cfg: LMConfig):
+    """tokens: (B, S) int32 → (logits f32 (B,S,V), h_pre_norm, aux_loss)."""
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(cfg.jdtype)
+    positions = jnp.arange(S)
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h, a = block(layer_p, h, cfg, positions)
+        return (h, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (h, aux), _ = jax.lax.scan(
+        body_fn,
+        (h, jnp.zeros((), jnp.float32)),
+        params["layers"],
+        unroll=cfg.n_layers if cfg.unroll_layers else 1,
+    )
+    hn = rms_norm(params["final_ln"], h)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", hn, params["out_head"], preferred_element_type=jnp.float32
+    )
+    return logits, h, aux
+
+
+def _ce(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Cross-entropy without take_along_axis: the label pick is a masked
+    reduction, so a vocab-sharded logits tensor never gets all-gathered
+    (gather over a sharded dim would)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    picked = jnp.einsum("...v,...v->...", logits, onehot)
+    return lse - picked
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig) -> tuple[jax.Array, dict]:
+    tokens = batch["tokens"]
+    logits, h, aux = forward(params, tokens, cfg)
+    ce = _ce(logits[:, :-1], tokens[:, 1:]).mean()
+    loss = ce + cfg.aux_loss_weight * aux
+    metrics = {"ce": ce, "aux": aux}
+    if cfg.mtp:
+        mtp = params["mtp"]
+        # predict token t+2 from h_t and embed(token t+1)  (DeepSeek-V3 MTP)
+        h_in = rms_norm(mtp["ln_h"], h[:, :-1])
+        e_in = rms_norm(
+            mtp["ln_e"], params["embed"][tokens[:, 1:]].astype(cfg.jdtype)
+        )
+        x = jnp.einsum("bsd,dm->bsm", jnp.concatenate([h_in, e_in], -1), mtp["proj"])
+        positions = jnp.arange(x.shape[1])
+        layer0 = jax.tree.map(lambda a: a[0], mtp["block"])
+        x, _ = block(layer0, x, cfg, positions)
+        mtp_logits = jnp.einsum(
+            "bsd,dv->bsv",
+            rms_norm(params["final_ln"], x),
+            params["out_head"],
+            preferred_element_type=jnp.float32,
+        )
+        mtp_ce = _ce(mtp_logits[:, :-1], tokens[:, 2:]).mean()
+        loss = loss + cfg.mtp_weight * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def cache_shapes(cfg: LMConfig, batch: int, max_seq: int) -> dict:
+    L = cfg.n_layers
+    if cfg.attn == "mla":
+        return {
+            "ckv": (L, batch, max_seq, cfg.kv_lora_rank),
+            "kr": (L, batch, max_seq, cfg.qk_rope_dim),
+        }
+    return {
+        "k": (L, batch, max_seq, cfg.n_kv_heads, cfg.d_head),
+        "v": (L, batch, max_seq, cfg.n_kv_heads, cfg.d_head),
+    }
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int) -> dict:
+    return {
+        k: jnp.zeros(s, dtype=cfg.jdtype) for k, s in cache_shapes(cfg, batch, max_seq).items()
+    }
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: LMConfig):
+    """Full-sequence forward that also returns the per-layer KV cache.
+    Returns (last-position logits (B, V), cache stacked (L, ...))."""
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(cfg.jdtype)
+    positions = jnp.arange(S)
+    attn_fn = mla_attention if cfg.attn == "mla" else gqa_attention
+
+    def body(h, layer_p):
+        layer_p = _zero3(layer_p, cfg)
+        a, kv = attn_fn(layer_p, rms_norm(layer_p["ln1"], h), cfg, positions)
+        h = h + a
+        f, _ = _ffn_part(layer_p, rms_norm(layer_p["ln2"], h), cfg)
+        return h + f, kv
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, kvs = jax.lax.scan(
+        body_fn, h, params["layers"],
+        unroll=cfg.n_layers if cfg.unroll_layers else 1,
+    )
+    hn = rms_norm(params["final_ln"], h[:, -1])
+    logits = jnp.einsum(
+        "bd,dv->bv", hn, params["out_head"], preferred_element_type=jnp.float32
+    )
+    if cfg.attn == "mla":
+        cache = {"ckv": kvs[0], "kr": kvs[1]}
+    else:
+        cache = {"k": kvs[0], "v": kvs[1]}
+    return logits, cache
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array, cfg: LMConfig):
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (current
+    position = current cache length). cache leaves are (L, B, S, ...).
+    Returns (logits (B, V), updated cache)."""
+    from repro.models.layers import DATA_AXES, maybe_shard
+
+    h = params["embed"][tokens].astype(cfg.jdtype)
+    if cfg.shard_decode_dmodel:
+        h = maybe_shard(h, None, None, DATA_AXES)
+
+    def body(h, xs):
+        layer_p, layer_cache = xs
+        h, new_cache = block_decode(layer_p, h, cfg, layer_cache, pos)
+        if cfg.shard_decode_dmodel:
+            h = maybe_shard(h, None, None, DATA_AXES)
+        return h, new_cache
+
+    h, new_cache = jax.lax.scan(
+        body, h, (params["layers"], cache),
+        unroll=cfg.n_layers if cfg.unroll_layers else 1,
+    )
+    hn = rms_norm(params["final_ln"], h[:, -1])
+    logits = jnp.einsum(
+        "bd,dv->bv", hn, params["out_head"], preferred_element_type=jnp.float32
+    )
+    return logits, new_cache

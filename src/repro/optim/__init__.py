@@ -1,0 +1,20 @@
+"""Optimizers + distributed-optimization tricks (no external deps)."""
+
+from repro.optim.optimizers import adamw, adafactor, sgd, apply_updates, Optimizer
+from repro.optim.schedule import warmup_cosine
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compress import quantize_int8, dequantize_int8, ef_compress_update
+
+__all__ = [
+    "adamw",
+    "adafactor",
+    "sgd",
+    "apply_updates",
+    "Optimizer",
+    "warmup_cosine",
+    "clip_by_global_norm",
+    "global_norm",
+    "quantize_int8",
+    "dequantize_int8",
+    "ef_compress_update",
+]

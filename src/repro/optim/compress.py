@@ -1,0 +1,60 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-tensor-block quantization: grads are quantized before the cross-pod
+all-reduce (4× wire bytes saved at bf16, 2× at f32→int8+scale), and the
+quantization error is carried in an error-feedback buffer added to the next
+step's gradient (Seide et al. 2014 / EF-SGD) so convergence is preserved.
+
+``compressed_psum`` is the shard_map building block: quantize → psum of int32
+accumulators → dequantize. Used for the slow inter-pod axis only ("pod"
+bandwidth << intra-pod ICI); intra-pod reductions stay full-precision.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, block: int = 256):
+    """Per-block symmetric int8: returns (q int8, scales f32)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, block: int = 256):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def ef_compress_update(grad: jax.Array, error: jax.Array, block: int = 256):
+    """Error-feedback compression of one tensor: returns
+    (decompressed_grad, new_error). decompressed = Q(grad + error);
+    new_error = (grad + error) - decompressed."""
+    target = grad.astype(jnp.float32) + error
+    q, s = quantize_int8(target, block)
+    deq = dequantize_int8(q, s, grad.shape, block)
+    return deq.astype(grad.dtype), target - deq
+
+
+def compressed_psum(x: jax.Array, axis_name: str, block: int = 256) -> jax.Array:
+    """psum with int8 wire format (inside shard_map): each participant
+    quantizes, the int8 payloads are summed in int32, then dequantized with
+    the max scale. Exactness is NOT preserved (that is the point of EF)."""
+    q, s = quantize_int8(x, block)
+    s_max = jax.lax.pmax(s, axis_name)
+    # rescale local payload to the common scale so the int sum is coherent
+    q_common = jnp.round(
+        q.astype(jnp.float32) * (s / s_max)[:, None]
+    ).astype(jnp.int32)
+    total = jax.lax.psum(q_common, axis_name)
+    return dequantize_int8(total, s_max, x.shape, block)

@@ -1,0 +1,157 @@
+"""AdamW / Adafactor / SGD — optax-like minimal interface.
+
+Memory policy for 100B+ models (DESIGN.md): AdamW supports bf16 moments
+(halves optimizer HBM); Adafactor factors the second moment into row/col
+statistics (O(n+m) instead of O(nm)) — used for the 340B/671B configs so
+params+grads+state fit 16 GB/chip on the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable  # params -> state
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def _sched(lr, count):
+    return lr(count) if callable(lr) else lr
+
+
+def sgd(lr, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {
+            "mu": jax.tree.map(jnp.zeros_like, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params=None):
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        count = state["count"] + 1
+        step = _sched(lr, count)
+        updates = jax.tree.map(lambda m: -step * m, mu)
+        return updates, {"mu": mu, "count": count}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        m = jax.tree.map(
+            lambda m_, g: (b1 * m_.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(moment_dtype),
+            state["m"], grads,
+        )
+        v = jax.tree.map(
+            lambda v_, g: (b2 * v_.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(moment_dtype),
+            state["v"], grads,
+        )
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        step = _sched(lr, count)
+
+        def u(m_, v_, p):
+            mhat = m_.astype(jnp.float32) / c1
+            vhat = v_.astype(jnp.float32) / c2
+            return -step * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+
+        updates = jax.tree.map(u, m, v, params)
+        return updates, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def adafactor(
+    lr,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018): matrices keep
+    per-row + per-col statistics only. 1-D params fall back to full AdaGrad-
+    style accumulators."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                return {
+                    "r": jnp.zeros(p.shape[:-1], jnp.float32),     # row stats
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "stats": jax.tree.map(leaf, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** -decay
+        step = _sched(lr, count)
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                r = beta * s["r"] + (1 - beta) * g2.mean(axis=-1)
+                c = beta * s["c"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (
+                    r[..., None]
+                    / jnp.maximum(r.mean(axis=-1, keepdims=True), eps)[..., None]
+                ) * c[..., None, :]
+                upd = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # relative update clipping (Adafactor's RMS clip)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            upd = -step * (upd + weight_decay * p.astype(jnp.float32))
+            return upd, new_s
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state["stats"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = treedef.unflatten([o[0] for o in out])
+        stats = treedef.unflatten([o[1] for o in out])
+        return updates, {"stats": stats, "count": count}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr, **kwargs) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}[name](lr, **kwargs)

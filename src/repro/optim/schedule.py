@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def lr(count):
+        c = count.astype(jnp.float32) if hasattr(count, "astype") else float(count)
+        warm = peak_lr * c / max(warmup_steps, 1)
+        progress = jnp.clip(
+            (c - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+        return jnp.where(c < warmup_steps, warm, cos)
+
+    return lr

@@ -1,0 +1,129 @@
+"""Fault tolerance for the co-occurrence pipeline and the training loop.
+
+The key structural property (DESIGN.md §6): the distributed Gram sum
+C = Σ_s B_sᵀ B_s is a bag of independent, additive (shard × vocab-tile) work
+units. Fault tolerance is therefore bookkeeping, not consensus:
+
+  * ``WorkTracker`` — the (shard, tile) completion bitmap. Completed units
+    are idempotent (each unit's contribution is added exactly once because
+    the unit, not the worker, owns the accumulator slot).
+  * ``HeartbeatMonitor`` — deadline-based failure/straggler detection. A unit
+    leased past its deadline is re-enqueued (backup-task / speculative
+    execution, MapReduce-style). Whichever completion lands first wins; the
+    bitmap makes the second a no-op.
+  * Training-side: the same tracker drives data-shard reassignment after an
+    elastic re-mesh (runtime/elastic.py), and CheckpointManager provides the
+    restart point.
+
+Host-level logic (pure python/numpy) — on a real cluster the heartbeats come
+from jax.distributed client liveness; here workers are simulated, which is
+exactly what the unit tests exercise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class Lease:
+    unit: tuple
+    worker: str
+    deadline: float
+
+
+class WorkTracker:
+    """Completion bitmap + lease table over independent work units."""
+
+    def __init__(self, units):
+        self.pending = list(units)
+        self.leases: dict[tuple, Lease] = {}
+        self.done: set[tuple] = set()
+        self.completions_ignored = 0  # duplicate completions (backup tasks)
+
+    # -- scheduling --
+    def claim(self, worker: str, now: float, lease_seconds: float = 60.0):
+        if not self.pending:
+            return None
+        unit = self.pending.pop(0)
+        self.leases[unit] = Lease(unit, worker, now + lease_seconds)
+        return unit
+
+    def complete(self, unit: tuple, worker: str) -> bool:
+        """Returns True iff this completion is the FIRST for the unit (the
+        caller may then add its contribution to the accumulator)."""
+        if unit in self.done:
+            self.completions_ignored += 1
+            return False
+        self.done.add(unit)
+        self.leases.pop(unit, None)
+        return True
+
+    # -- failure & straggler handling --
+    def expire(self, now: float) -> list[tuple]:
+        """Re-enqueue units whose lease expired (dead or straggling worker)."""
+        expired = [l.unit for l in self.leases.values() if l.deadline < now]
+        for u in expired:
+            del self.leases[u]
+        # retry-first: expired units jump the queue (backup-task semantics)
+        self.pending = expired + self.pending
+        return expired
+
+    def fail_worker(self, worker: str) -> list[tuple]:
+        """Immediately re-enqueue everything leased to a known-dead worker."""
+        units = [l.unit for l in self.leases.values() if l.worker == worker]
+        for u in units:
+            del self.leases[u]
+        self.pending = units + self.pending  # retry-first
+        return units
+
+    @property
+    def finished(self) -> bool:
+        return not self.pending and not self.leases
+
+    def state(self) -> dict:
+        """Serializable snapshot (checkpointed alongside the accumulator)."""
+        return {
+            "pending": [list(u) for u in self.pending],
+            "leased": [list(l.unit) for l in self.leases.values()],
+            "done": [list(u) for u in sorted(self.done)],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "WorkTracker":
+        t = cls([])
+        # leased units were in flight at checkpoint time → re-enqueue
+        t.pending = [tuple(u) for u in state["pending"]] + [
+            tuple(u) for u in state["leased"]
+        ]
+        t.done = {tuple(u) for u in state["done"]}
+        return t
+
+
+class HeartbeatMonitor:
+    """Deadline-based liveness. Workers ping; silence past ``timeout`` marks
+    them dead; ``slow_factor``× the median completion time marks a straggler
+    (which triggers a backup task, not a kill)."""
+
+    def __init__(self, timeout: float = 30.0, slow_factor: float = 3.0):
+        self.timeout = timeout
+        self.slow_factor = slow_factor
+        self.last_seen: dict[str, float] = {}
+        self.durations: list[float] = []
+
+    def ping(self, worker: str, now: float | None = None):
+        self.last_seen[worker] = time.monotonic() if now is None else now
+
+    def record_duration(self, seconds: float):
+        self.durations.append(seconds)
+
+    def dead_workers(self, now: float) -> list[str]:
+        return [w for w, t in self.last_seen.items() if now - t > self.timeout]
+
+    def straggler_deadline(self) -> float:
+        """Lease duration adapted to observed completion times."""
+        if not self.durations:
+            return self.timeout
+        med = sorted(self.durations)[len(self.durations) // 2]
+        return max(self.slow_factor * med, 1e-3)

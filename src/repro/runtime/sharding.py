@@ -1,0 +1,113 @@
+"""Sharding rules: parameter-path → PartitionSpec.
+
+Layout policy (MaxText-flavoured):
+  * "model" axis: tensor parallel (attention heads / FFN width / expert axis
+    / vocab / embedding rows);
+  * remaining axes ("data", and "pod" when multi-pod): FSDP — weights are
+    additionally sliced along their d_model-adjacent dimension and
+    all-gathered per layer inside the scanned block;
+  * norms/biases replicate (tiny).
+
+GSPMD pads non-divisible dimensions (e.g. MiniCPM's 73448 vocab over 16-way
+model) — divisibility is only required in our own shard_map code paths.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def fsdp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _lm_rule(name: str, ndim: int, fsdp, model="model"):
+    # name is the leaf key, arrays carry a leading L (layers) axis when ndim
+    # is one higher than the logical matrix
+    lead = (None,) * (ndim - 2)
+    if name in ("embed",):
+        return P(model, fsdp)
+    if name in ("out_head",):
+        return P(fsdp, model)
+    if name in ("proj",):  # MTP projection (2d, d)
+        return P(fsdp, None)
+    if name in ("wq", "wk", "wv", "w_in", "w_gate", "w_uq", "sh_w_in", "sh_w_gate"):
+        return P(*lead, fsdp, model)
+    if name in ("wo", "w_out", "sh_w_out"):
+        return P(*lead, model, fsdp)
+    if name in ("w_dq", "w_dkv", "w_kr"):
+        return P(*lead, fsdp, None)
+    if name in ("w_uk", "w_uv"):
+        return P(*lead, None, model)
+    if name == "router":
+        return P(*((None,) * ndim))  # small; replicated (shard_map in_spec)
+    if name in ("moe_w_in", "moe_w_gate"):  # (L, E, d, f)
+        return P(*lead[:-1], model, fsdp, None)
+    if name == "moe_w_out":  # (L, E, f, d)
+        return P(*lead[:-1], model, None, fsdp)
+    if name in ("bq", "bk", "bv"):
+        return P(*lead, model)
+    # norms, small vectors
+    return P(*((None,) * ndim))
+
+
+def lm_param_specs(shapes_tree, mesh) -> dict:
+    """shapes_tree: pytree of shape-tuples (models.transformer.param_shapes)."""
+    fsdp = fsdp_axes(mesh)
+
+    def walk(tree):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                out[k] = _lm_rule(k, len(v), fsdp)
+        return out
+
+    return walk(shapes_tree)
+
+
+def gnn_param_specs(shapes_tree, mesh) -> dict:
+    """GraphSAGE weights are small → replicate everything."""
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        return P(*((None,) * len(tree)))
+
+    return walk(shapes_tree)
+
+
+def recsys_param_specs(shapes_tree, mesh) -> dict:
+    """Embedding tables row-shard over "model" (embedding parallelism — the
+    recsys analogue of expert parallelism); dense towers replicate (they are
+    ≤ a few MB and used by every example)."""
+
+    def walk(tree, key=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [walk(v, key) for v in tree]
+        big_table = key in ("item_embed", "cat_embed", "embed", "linear")
+        if big_table:
+            return P("model", *((None,) * (len(tree) - 1)))
+        return P(*((None,) * len(tree)))
+
+    return walk(shapes_tree)
+
+
+def attach(mesh, specs_tree, shapes_tree, dtype_tree=None, default_dtype="float32"):
+    """shape tree + spec tree → pytree of sharded ShapeDtypeStructs."""
+    from jax.sharding import NamedSharding
+
+    def leaf(shape, spec):
+        import jax.numpy as jnp
+
+        return jax.ShapeDtypeStruct(
+            shape, jnp.dtype(default_dtype), sharding=NamedSharding(mesh, spec)
+        )
+
+    return jax.tree.map(
+        leaf, shapes_tree, specs_tree, is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, int) for i in x)
+    )

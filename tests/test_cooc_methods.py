@@ -1,0 +1,149 @@
+"""Every counting method must equal the brute-force oracle EXACTLY
+(integer counts — the paper's whole point is exactness, so no allclose)."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cooc import METHODS, dense_counts
+from repro.core.oracle import brute_force_counts
+from repro.core.stats import pmi_matrix, ppmi_matrix, top_k_pairs
+from repro.core.types import DenseSink, FileSink, StatsSink, read_pair_file
+from repro.core.naive import count_naive
+from repro.core.list_scan import count_list_scan
+from repro.data.corpus import synthetic_zipf_collection
+from repro.data.preprocess import remap_df_descending
+
+PAPER_METHODS = ["naive", "list-pairs", "list-blocks", "list-scan", "multi-scan"]
+TPU_METHODS = [
+    "list-pairs-bitpacked",
+    "list-blocks-gram",
+    "list-scan-segment",
+    "multi-scan-matmul",
+]
+
+
+@pytest.fixture(scope="module")
+def coll():
+    return synthetic_zipf_collection(80, vocab=150, mean_len=14, seed=11)
+
+
+@pytest.fixture(scope="module")
+def oracle(coll):
+    return brute_force_counts(coll)
+
+
+@pytest.mark.parametrize("method", PAPER_METHODS)
+def test_paper_method_exact(method, coll, oracle):
+    assert np.array_equal(dense_counts(method, coll), oracle)
+
+
+@pytest.mark.parametrize("method", TPU_METHODS)
+def test_tpu_method_exact(method, coll, oracle):
+    # use_kernel=False: oracle jnp path (the Pallas path is swept separately
+    # in test_kernels.py; both paths share the exact same semantics)
+    assert np.array_equal(dense_counts(method, coll, use_kernel=False), oracle)
+
+
+@pytest.mark.parametrize("method", ["list-blocks-gram", "list-pairs-bitpacked"])
+def test_tpu_method_exact_with_pallas_interpret(method, coll, oracle):
+    small = coll.head(30)
+    assert np.array_equal(
+        dense_counts(method, small, use_kernel=True), brute_force_counts(small)
+    )
+
+
+def test_freq_split_exact(coll):
+    cd, _ = remap_df_descending(coll)
+    assert np.array_equal(
+        dense_counts("freq-split", cd, head=32, use_kernel=False),
+        brute_force_counts(cd),
+    )
+
+
+@pytest.mark.parametrize("head", [0, 1, 64, 10_000])
+def test_freq_split_head_boundaries(coll, head):
+    """Degenerate splits: all-tail (head=0) and all-head (head >= V)."""
+    cd, _ = remap_df_descending(coll)
+    assert np.array_equal(
+        dense_counts("freq-split", cd, head=head, use_kernel=False),
+        brute_force_counts(cd),
+    )
+
+
+def test_naive_flushing_equivalence(coll, oracle):
+    """Flush thresholds change run structure, never results (paper: 100M)."""
+    for flush in [50, 1000, 10**9]:
+        sink = DenseSink(coll.vocab_size)
+        stats = count_naive(coll, sink, flush_pairs=flush)
+        assert np.array_equal(sink.mat, oracle)
+        if flush == 50:
+            assert stats["num_flushes"] > 1
+        assert stats["peak_dict_pairs"] <= max(flush, stats["peak_dict_pairs"])
+
+
+def test_list_blocks_block_size_sweep(coll, oracle):
+    for bs in [1, 7, 13, 150, 1000]:
+        assert np.array_equal(
+            dense_counts("list-blocks", coll, block_size=bs), oracle
+        )
+
+
+def test_multi_scan_accumulator_sweep(coll, oracle):
+    for a in [1, 3, 100, 10_000]:
+        assert np.array_equal(dense_counts("multi-scan", coll, accumulators=a), oracle)
+
+
+def test_counts_bounded_by_df(coll, oracle):
+    df = np.bincount(coll.terms, minlength=coll.vocab_size)
+    i, j = np.nonzero(oracle)
+    assert np.all(oracle[i, j] <= np.minimum(df[i], df[j]))
+
+
+def test_file_sink_roundtrip(tmp_path, coll, oracle):
+    path = os.path.join(tmp_path, "pairs.bin")
+    sink = FileSink(path)
+    count_list_scan(coll, sink)
+    sink.close()
+    mat = np.zeros_like(oracle)
+    for primary, secondaries, counts in read_pair_file(path):
+        mat[primary, secondaries.astype(np.int64)] += counts.astype(np.int64)
+    assert np.array_equal(mat, oracle)
+
+
+def test_stats_sink_aggregates(coll, oracle):
+    sink = StatsSink()
+    count_list_scan(coll, sink)
+    assert sink.distinct_pairs == int((oracle > 0).sum())
+    assert sink.total_count == int(oracle.sum())
+    i, j = sink.max_pair
+    assert oracle[i, j] == oracle.max()
+
+
+def test_most_frequent_pair_is_high_df(coll, oracle):
+    """Paper §3: the most frequent pair was "to"–"the" — the two most common
+    terms. On a Zipf corpus the max-count pair must be among high-df terms."""
+    df = np.bincount(coll.terms, minlength=coll.vocab_size)
+    (i, j, cnt) = top_k_pairs(oracle, 1)[0]
+    top_df_terms = set(np.argsort(-df)[:10].tolist())
+    assert i in top_df_terms and j in top_df_terms
+    assert cnt == oracle.max()
+
+
+def test_pmi_ppmi(coll, oracle):
+    df = np.bincount(coll.terms, minlength=coll.vocab_size)
+    pmi = pmi_matrix(oracle, df, coll.num_docs)
+    ppmi = ppmi_matrix(oracle, df, coll.num_docs)
+    assert np.all(ppmi >= 0)
+    i, j = np.nonzero(oracle)
+    k = (i[0], j[0])
+    expected = np.log(
+        oracle[k] * coll.num_docs / (df[k[0]] * df[k[1]])
+    )
+    assert np.isclose(pmi[k], expected)
+    assert np.isclose(ppmi[k], max(expected, 0.0))
+
+
+def test_all_registered_methods_run(coll):
+    assert set(PAPER_METHODS + TPU_METHODS + ["freq-split"]) == set(METHODS)

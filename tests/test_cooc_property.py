@@ -1,0 +1,104 @@
+"""Hypothesis property tests: system invariants over random corpora.
+
+Strategy generates raw documents WITH duplicates and unsorted tokens so the
+preprocessing path (dedup + sort, paper §2) is exercised too.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cooc import dense_counts
+from repro.core.oracle import brute_force_counts
+from repro.core.types import DenseSink
+from repro.core.hybrid import count_freq_split
+from repro.data.preprocess import preprocess_documents, remap_df_descending, shard_documents
+
+VOCAB = 40
+
+documents = st.lists(
+    st.lists(st.integers(0, VOCAB - 1), min_size=0, max_size=25),
+    min_size=1,
+    max_size=30,
+)
+
+
+@st.composite
+def corpora(draw):
+    docs = draw(documents)
+    return preprocess_documents(docs, vocab_size=VOCAB)
+
+
+@settings(max_examples=40, deadline=None)
+@given(corpora())
+def test_all_methods_agree_with_oracle(c):
+    oracle = brute_force_counts(c)
+    for method in ["naive", "list-pairs", "list-blocks", "list-scan", "multi-scan"]:
+        got = dense_counts(method, c)
+        assert np.array_equal(got, oracle), method
+
+
+@settings(max_examples=25, deadline=None)
+@given(corpora())
+def test_tpu_adaptations_agree_with_oracle(c):
+    oracle = brute_force_counts(c)
+    for method in [
+        "list-pairs-bitpacked",
+        "list-blocks-gram",
+        "list-scan-segment",
+        "multi-scan-matmul",
+    ]:
+        got = dense_counts(method, c, use_kernel=False)
+        assert np.array_equal(got, oracle), method
+
+
+@settings(max_examples=25, deadline=None)
+@given(corpora(), st.integers(0, VOCAB))
+def test_freq_split_any_head(c, head):
+    cd, _ = remap_df_descending(c)
+    sink = DenseSink(cd.vocab_size)
+    count_freq_split(cd, sink, head=head, use_kernel=False)
+    assert np.array_equal(sink.mat, brute_force_counts(cd))
+
+
+@settings(max_examples=30, deadline=None)
+@given(corpora())
+def test_count_invariants(c):
+    oracle = brute_force_counts(c)
+    df = np.bincount(c.terms, minlength=VOCAB)
+    # strict upper triangle only
+    assert np.array_equal(oracle, np.triu(oracle, k=1))
+    # bounded by min df
+    i, j = np.nonzero(oracle)
+    assert np.all(oracle[i, j] <= np.minimum(df[i], df[j]))
+    # total pair mass == sum over docs of len*(len-1)/2
+    lens = c.doc_lengths().astype(np.int64)
+    assert oracle.sum() == int((lens * (lens - 1) // 2).sum())
+
+
+@settings(max_examples=25, deadline=None)
+@given(corpora(), st.integers(1, 5))
+def test_shard_additivity(c, n_shards):
+    """C = Σ_s B_sᵀ B_s — the property that makes the distributed (and
+    fault-tolerant) accumulation correct."""
+    total = brute_force_counts(c)
+    acc = np.zeros_like(total)
+    for s in shard_documents(c, n_shards):
+        acc += brute_force_counts(s)
+    assert np.array_equal(acc, total)
+
+
+@settings(max_examples=25, deadline=None)
+@given(corpora())
+def test_renumbering_invariance(c):
+    """Counts are permutation-equivariant under term renumbering."""
+    cd, old_of_new = remap_df_descending(c)
+    a = brute_force_counts(c)
+    b = brute_force_counts(cd)
+    # map b back through the permutation: b[i,j] counts pair (old i, old j)
+    V = c.vocab_size
+    back = np.zeros_like(a)
+    i, j = np.nonzero(b)
+    oi, oj = old_of_new[i], old_of_new[j]
+    lo, hi = np.minimum(oi, oj), np.maximum(oi, oj)
+    np.add.at(back, (lo, hi), b[i, j])
+    assert np.array_equal(back, a)

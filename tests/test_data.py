@@ -1,0 +1,106 @@
+"""Data-substrate invariants: corpus generation, preprocessing, indexes."""
+
+import numpy as np
+import pytest
+
+from repro.data.corpus import Collection, collection_stats, synthetic_zipf_collection
+from repro.data.index import (
+    build_inverted_index,
+    forward_padded,
+    incidence_bitpacked,
+    incidence_dense,
+)
+from repro.data.preprocess import preprocess_documents, remap_df_descending, shard_documents
+
+
+@pytest.fixture(scope="module")
+def coll():
+    return synthetic_zipf_collection(200, vocab=500, mean_len=25, seed=7)
+
+
+def test_preprocess_dedup_sort():
+    c = preprocess_documents([[5, 3, 3, 1], [2, 2], [], [9, 0, 9]])
+    assert c.num_docs == 4
+    assert np.array_equal(c.doc(0), [1, 3, 5])
+    assert np.array_equal(c.doc(1), [2])
+    assert len(c.doc(2)) == 0
+    assert np.array_equal(c.doc(3), [0, 9])
+    assert c.vocab_size == 10
+
+
+def test_collection_invariants(coll):
+    for d in range(coll.num_docs):
+        ts = coll.doc(d)
+        assert np.all(np.diff(ts) > 0), "per-doc terms must be strictly ascending"
+        assert ts.dtype == np.int32
+    assert coll.doc_ptr[0] == 0 and coll.doc_ptr[-1] == len(coll.terms)
+
+
+def test_head_prefix(coll):
+    h = coll.head(50)
+    assert h.num_docs == 50
+    for d in range(50):
+        assert np.array_equal(h.doc(d), coll.doc(d))
+
+
+def test_stats_shape(coll):
+    s = collection_stats(coll)
+    assert s["num_docs"] == 200
+    assert s["min_doc_len"] >= 1
+    assert s["num_postings"] == coll.num_postings
+    assert s["pair_occurrences"] > 0
+
+
+def test_inverted_index_roundtrip(coll):
+    inv = build_inverted_index(coll)
+    assert inv.term_ptr[-1] == coll.num_postings
+    # postings ascending, and doc d contains t iff d in postings(t)
+    df = inv.df()
+    for t in np.nonzero(df)[0][:50]:
+        post = inv.postings(t)
+        assert np.all(np.diff(post) > 0)
+        for d in post[:5]:
+            assert t in coll.doc(int(d))
+
+
+def test_incidence_dense_matches_index(coll):
+    B = incidence_dense(coll, 0, 40, 0, coll.vocab_size)
+    for d in range(40):
+        assert np.array_equal(np.nonzero(B[d])[0], coll.doc(d))
+
+
+def test_incidence_bitpacked_popcounts(coll):
+    inv = build_inverted_index(coll)
+    bits = incidence_bitpacked(coll)
+    df = inv.df()
+    popcounts = np.unpackbits(bits.view(np.uint8), bitorder="little").reshape(
+        coll.vocab_size, -1
+    ).sum(axis=1)
+    assert np.array_equal(popcounts, df)
+
+
+def test_forward_padded(coll):
+    fwd, lens = forward_padded(coll)
+    assert np.array_equal(lens, coll.doc_lengths())
+    for d in range(20):
+        assert np.array_equal(fwd[d, : lens[d]], coll.doc(d))
+        assert np.all(fwd[d, lens[d]:] == coll.vocab_size)
+
+
+def test_df_descending_remap(coll):
+    c2, old_of_new = remap_df_descending(coll)
+    df2 = np.bincount(c2.terms, minlength=c2.vocab_size)
+    assert np.all(np.diff(df2) <= 0), "df must be non-increasing in new IDs"
+    # permutation must preserve the multiset of documents
+    for d in range(20):
+        orig = set(coll.doc(d).tolist())
+        back = set(old_of_new[c2.doc(d)].tolist())
+        assert orig == back
+
+
+def test_shard_documents_partition(coll):
+    shards = shard_documents(coll, 7)
+    assert sum(s.num_docs for s in shards) == coll.num_docs
+    assert sum(s.num_postings for s in shards) == coll.num_postings
+    recon = np.concatenate([s.terms for s in shards])
+    assert np.array_equal(recon, coll.terms)

@@ -1,0 +1,123 @@
+"""Per-kernel validation: shape/dtype sweeps, Pallas interpret=True vs the
+pure-jnp oracle in ref.py, plus exactness vs brute-force numpy."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------- cooc_gram
+@pytest.mark.parametrize(
+    "d,m,n",
+    [
+        (1, 1, 1),
+        (8, 16, 16),
+        (100, 50, 70),       # non-multiples force padding
+        (256, 128, 128),     # exactly one block
+        (300, 130, 257),     # multi-block + ragged
+        (512, 256, 384),
+    ],
+)
+def test_cooc_gram_shapes(d, m, n):
+    bi = (RNG.random((d, m)) < 0.15).astype(np.float32)
+    bj = (RNG.random((d, n)) < 0.15).astype(np.float32)
+    got = np.asarray(ops.cooc_gram(bi, bj))
+    want = bi.T.astype(np.int64) @ bj.astype(np.int64)
+    assert got.shape == (m, n)
+    assert np.array_equal(got.astype(np.int64), want)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int8, np.int32, bool])
+def test_cooc_gram_input_dtypes(dtype):
+    bi = (RNG.random((64, 32)) < 0.2).astype(dtype)
+    got = np.asarray(ops.cooc_gram(bi, bi))
+    want = bi.astype(np.int64).T @ bi.astype(np.int64)
+    assert np.array_equal(got.astype(np.int64), want)
+
+
+@pytest.mark.parametrize("blk", [(128, 128, 256), (256, 128, 512), (128, 256, 1024)])
+def test_cooc_gram_block_sweep(blk):
+    bm, bn, bd = blk
+    bi = (RNG.random((700, 200)) < 0.1).astype(np.float32)
+    got = np.asarray(ops.cooc_gram(bi, bi, blk_m=bm, blk_n=bn, blk_d=bd))
+    want = np.asarray(ref.cooc_gram_ref(jnp.asarray(bi), jnp.asarray(bi)))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_cooc_gram_kernel_vs_ref_oracle_is_gram():
+    """ref.py oracle itself equals the mathematical definition."""
+    bi = (RNG.random((128, 64)) < 0.3).astype(np.float32)
+    want = bi.T @ bi
+    got = np.asarray(ref.cooc_gram_ref(jnp.asarray(bi), jnp.asarray(bi)))
+    np.testing.assert_allclose(got, want)
+
+
+# ----------------------------------------------------------------- bitpair
+@pytest.mark.parametrize(
+    "m,n,w",
+    [(1, 1, 1), (5, 9, 3), (64, 64, 128), (70, 130, 200), (128, 64, 257)],
+)
+def test_bitpair_shapes(m, n, w):
+    wi = RNG.integers(0, 2**32, size=(m, w), dtype=np.uint32)
+    wj = RNG.integers(0, 2**32, size=(n, w), dtype=np.uint32)
+    got = np.asarray(ops.bitpair_popcount(wi, wj))
+    want = np.asarray(
+        ref.bitpair_popcount_ref(jnp.asarray(wi), jnp.asarray(wj))
+    )
+    assert got.shape == (m, n)
+    assert np.array_equal(got, want)
+
+
+def test_bitpair_against_set_intersection():
+    """Bitmaps built from explicit posting lists: popcount == |A ∩ B|."""
+    n_docs, n_terms = 1000, 12
+    W = (n_docs + 31) // 32
+    posts = [np.unique(RNG.integers(0, n_docs, size=RNG.integers(1, 200)))
+             for _ in range(n_terms)]
+    bits = np.zeros((n_terms, W), dtype=np.uint32)
+    for t, ds in enumerate(posts):
+        np.bitwise_or.at(bits[t], ds // 32, np.uint32(1) << (ds % 32).astype(np.uint32))
+    got = np.asarray(ops.bitpair_popcount(bits, bits))
+    for a in range(n_terms):
+        for b in range(n_terms):
+            assert got[a, b] == len(np.intersect1d(posts[a], posts[b]))
+
+
+def test_bitpair_zero_words():
+    wi = np.zeros((4, 8), dtype=np.uint32)
+    assert np.all(np.asarray(ops.bitpair_popcount(wi, wi)) == 0)
+
+
+# ------------------------------------------------------------- segment_hist
+@pytest.mark.parametrize(
+    "L,rows,vocab",
+    [(1, 1, 1), (100, 4, 50), (512, 8, 128), (1000, 16, 300), (2048, 32, 513)],
+)
+def test_segment_hist_shapes(L, rows, vocab):
+    ids = RNG.integers(-1, vocab, size=L).astype(np.int32)
+    seg = RNG.integers(-1, rows, size=L).astype(np.int32)
+    got = np.asarray(ops.segment_hist(ids, seg, num_rows=rows, vocab=vocab))
+    want = np.asarray(ref.segment_hist_ref(jnp.asarray(ids), jnp.asarray(seg), rows, vocab))
+    assert got.shape == (rows, vocab)
+    assert np.array_equal(got, want)
+
+
+def test_segment_hist_against_numpy_histogram():
+    L, rows, vocab = 700, 5, 90
+    ids = RNG.integers(0, vocab, size=L).astype(np.int32)
+    seg = RNG.integers(0, rows, size=L).astype(np.int32)
+    got = np.asarray(ops.segment_hist(ids, seg, num_rows=rows, vocab=vocab))
+    want = np.zeros((rows, vocab), dtype=np.int64)
+    np.add.at(want, (seg, ids), 1)
+    assert np.array_equal(got.astype(np.int64), want)
+
+
+def test_segment_hist_all_padding():
+    ids = np.full(64, -1, dtype=np.int32)
+    seg = np.full(64, -1, dtype=np.int32)
+    got = np.asarray(ops.segment_hist(ids, seg, num_rows=3, vocab=10))
+    assert np.all(got == 0)

@@ -1,0 +1,124 @@
+"""Launch-layer integration: sharding rules lower+compile on a small mesh
+(subprocess, 8 placeholder devices), end-to-end cooc driver with resume,
+roofline HLO parser, serve driver."""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+SMALL_MESH_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_spec
+    from repro.launch.train import make_lm_train_step, pick_optimizer, opt_state_specs
+    from repro.models import transformer as T
+    from repro.runtime.sharding import lm_param_specs
+    from repro.launch.specs import _attach, _sds
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    for arch in ["olmoe-1b-7b", "minicpm3-4b"]:
+        cfg = dataclasses.replace(get_spec(arch).smoke(), remat=True)
+        shapes_tree = T.param_shapes(cfg)
+        specs = lm_param_specs(shapes_tree, mesh)
+        params = jax.eval_shape(lambda c=cfg: T.init_params(jax.random.PRNGKey(0), c))
+        params_sds = _attach(params, specs, mesh)
+        opt, opt_name = pick_optimizer(cfg.num_params())
+        ostate = _attach(jax.eval_shape(opt.init, params_sds),
+                         opt_state_specs(opt_name, specs, shapes_tree), mesh)
+        tokens = _sds((8, 32), jnp.int32, mesh, P(("data",), None))
+        step = make_lm_train_step(cfg, opt)
+        with jax.set_mesh(mesh):
+            compiled = jax.jit(step, donate_argnums=0).lower(
+                (params_sds, ostate), {"tokens": tokens}
+            ).compile()
+        cost = compiled.cost_analysis()
+        assert (cost[0] if isinstance(cost, (list, tuple)) else cost)["flops"] > 0
+        print(arch, "lowered+compiled on 2x4 mesh OK")
+    print("DONE")
+    """
+)
+
+
+def test_lm_sharding_rules_compile_small_mesh():
+    res = subprocess.run(
+        [sys.executable, "-c", SMALL_MESH_SCRIPT],
+        capture_output=True, text=True,
+        cwd=__file__.rsplit("/", 2)[0], timeout=900,
+    )
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "DONE" in res.stdout
+
+
+def test_cooc_run_end_to_end_and_resume(tmp_path):
+    from repro.core.oracle import brute_force_counts
+    from repro.data.corpus import synthetic_zipf_collection
+    from repro.data.preprocess import remap_df_descending
+    from repro.launch.cooc_run import run
+
+    out = str(tmp_path / "run1")
+    res = run(num_docs=200, vocab=300, method="freq-split", num_shards=5,
+              out_dir=out, ckpt_every=2)
+    # exactness of the merged result
+    c = synthetic_zipf_collection(200, vocab=300, mean_len=60, seed=0)
+    cd, _ = remap_df_descending(c)
+    oracle = brute_force_counts(cd)
+    assert res["distinct_pairs"] == int((oracle > 0).sum())
+    assert res["total_count"] == int(oracle.sum())
+    # resume from the checkpoint: counts must not double
+    res2 = run(num_docs=200, vocab=300, method="freq-split", num_shards=5,
+               out_dir=out, ckpt_every=2, resume=True)
+    assert res2["total_count"] == res["total_count"]
+
+
+def test_roofline_collective_parser():
+    from repro.launch.roofline import collective_bytes
+
+    hlo = """
+      %ag = bf16[16,512]{1,0} all-gather(bf16[16,32]{1,0} %x), dimensions={1}
+      %ar = f32[1024]{0} all-reduce(f32[1024]{0} %y), to_apply=%sum
+      %t = (f32[256]{0}, f32[256]{0}) all-reduce(f32[256]{0} %a, f32[256]{0} %b)
+      %cp = u32[64,2]{1,0} collective-permute(u32[64,2]{1,0} %z)
+      %done = f32[8]{0} all-reduce-done(f32[8]{0} %h)
+    """
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 16 * 512 * 2
+    assert got["all-reduce"] == 1024 * 4 + 2 * 256 * 4
+    assert got["collective-permute"] == 64 * 2 * 4
+
+
+def test_serve_driver_generates():
+    from repro.launch.serve import serve
+
+    out, stats = serve("olmoe-1b-7b", batch=2, prompt_len=8, gen=4)
+    assert out.shape == (2, 4)
+    assert stats["decode_tokens_per_s"] > 0
+
+
+def test_fit_spec_divisibility():
+    import os
+    from jax.sharding import PartitionSpec as P
+
+    # uses the default single-device "mesh" workaround: construct via jax
+    import jax
+    from repro.launch.specs import _fit_spec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (16, 16)
+
+    spec = _fit_spec((73448, 2560), P("model", "data"), FakeMesh)
+    assert spec == P(None, "data")  # 73448 % 16 != 0 → replicated
+    spec = _fit_spec((128, 64), P(("data", "model"), None), FakeMesh)
+    assert spec == P(None, None)  # 128 % 256 != 0
+    spec = _fit_spec((512, 64), P(("data", "model"), None), FakeMesh)
+    assert spec == P(("data", "model"), None)

@@ -1,0 +1,180 @@
+"""Optimizer correctness, schedules, compression, checkpointing."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint, save_checkpoint
+from repro.optim import (
+    adafactor,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    dequantize_int8,
+    ef_compress_update,
+    global_norm,
+    quantize_int8,
+    sgd,
+    warmup_cosine,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _quadratic_params():
+    return {"w": jnp.asarray(RNG.normal(size=(8, 4)).astype(np.float32)),
+            "b": jnp.zeros((4,), jnp.float32)}
+
+
+def _loss(params, x):
+    y = x @ params["w"] + params["b"]
+    return jnp.mean(jnp.square(y - 1.0))
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.05),
+    lambda: adamw(0.05),
+    lambda: adamw(0.05, moment_dtype=jnp.bfloat16),
+    # adafactor's update is sign-like in magnitude → needs a decaying step
+    lambda: adafactor(lambda t: 0.5 / jnp.sqrt(t.astype(jnp.float32))),
+])
+def test_optimizers_minimize_quadratic(make_opt):
+    opt = make_opt()
+    params = _quadratic_params()
+    state = opt.init(params)
+    x = jnp.asarray(RNG.normal(size=(32, 8)).astype(np.float32))
+    l0 = float(_loss(params, x))
+    for _ in range(60):
+        grads = jax.grad(_loss)(params, x)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(_loss(params, x)) < 0.2 * l0
+
+
+def test_adafactor_memory_is_factored():
+    opt = adafactor(0.1)
+    params = {"w": jnp.zeros((128, 64))}
+    state = opt.init(params)
+    assert state["stats"]["w"]["r"].shape == (128,)
+    assert state["stats"]["w"]["c"].shape == (64,)
+
+
+def test_warmup_cosine():
+    lr = warmup_cosine(1.0, 10, 100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.int32(5))) == pytest.approx(0.5)
+    assert float(lr(jnp.int32(100))) == pytest.approx(0.1, abs=1e-6)
+    assert float(lr(jnp.int32(55))) < 1.0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 3.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(90))
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    small = {"a": jnp.ones((4,)) * 0.01}
+    same, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 0.01)
+
+
+def test_int8_quantization_roundtrip_error():
+    x = jnp.asarray(RNG.normal(size=(1000,)).astype(np.float32))
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s, x.shape)
+    rel = np.abs(np.asarray(deq) - np.asarray(x)).max() / np.abs(np.asarray(x)).max()
+    assert rel < 0.01  # int8 block quant ≈ 0.4% max error
+
+
+def test_error_feedback_accumulates():
+    """EF: the sum of decompressed grads converges to the sum of true grads."""
+    g = jnp.asarray(RNG.normal(size=(512,)).astype(np.float32)) * 1e-3
+    err = jnp.zeros_like(g)
+    total_sent = np.zeros(512, np.float32)
+    for i in range(20):
+        sent, err = ef_compress_update(g, err)
+        total_sent += np.asarray(sent)
+    drift = np.abs(total_sent - 20 * np.asarray(g)).max()
+    # residual error is bounded by one quantization step, NOT growing with t
+    assert drift <= np.abs(np.asarray(err)).max() + 1e-6
+
+
+# ---------------------------------------------------------------- checkpoint
+def _tree():
+    return {
+        "params": {"w": jnp.asarray(RNG.normal(size=(6, 3)).astype(np.float32))},
+        "opt": {"m": jnp.ones((6, 3), jnp.bfloat16), "count": jnp.int32(7)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    save_checkpoint(d, 42, tree, extra={"loss": 1.5})
+    assert latest_step(d) == 42
+    restored, extra = restore_checkpoint(d, 42, jax.eval_shape(lambda: tree))
+    assert extra["loss"] == 1.5
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        tree, restored,
+    )
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A half-written .tmp directory must be invisible to latest_step."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    os.makedirs(os.path.join(d, "step_00000002.tmp"))
+    assert latest_step(d) == 1
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    bad = {"params": {"w": jnp.zeros((2, 2))}}
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, 1, jax.eval_shape(lambda: bad))
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep_last=2)
+    for step in [1, 2, 3, 4]:
+        mgr.save_async(step, _tree())
+    mgr.wait()
+    steps = sorted(
+        int(x.split("_")[1]) for x in os.listdir(d) if x.startswith("step_")
+    )
+    assert steps == [3, 4]
+
+
+def test_checkpoint_restart_continues_training(tmp_path):
+    """Kill-and-restart: restored state must continue producing identical
+    updates (the fault-tolerance contract)."""
+    d = str(tmp_path)
+    opt = adamw(0.05)
+    params = _quadratic_params()
+    state = opt.init(params)
+    x = jnp.asarray(RNG.normal(size=(16, 8)).astype(np.float32))
+
+    def step(params, state):
+        grads = jax.grad(_loss)(params, x)
+        updates, state = opt.update(grads, state, params)
+        return apply_updates(params, updates), state
+
+    for _ in range(3):
+        params, state = step(params, state)
+    save_checkpoint(d, 3, {"p": params, "s": state})
+    p_cont, s_cont = step(params, state)  # the "would-have-been" step 4
+
+    restored, _ = restore_checkpoint(
+        d, 3, jax.eval_shape(lambda: {"p": params, "s": state})
+    )
+    p_rest, s_rest = step(restored["p"], restored["s"])
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7),
+        p_cont, p_rest,
+    )
