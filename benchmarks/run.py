@@ -6,6 +6,7 @@
 #   scaling  — log-log slope fits (paper §3 asymptotics)
 #   kernel   — Pallas-kernel oracle micro-benchmarks
 #   throughput — docs/hour headline (paper §1/§4)
+#   store    — store build + query serving (exactness-gated vs naive oracle)
 
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ def main() -> None:
         methods_memory,
         methods_time,
         scaling,
+        store_bench,
         throughput,
     )
 
@@ -29,6 +31,7 @@ def main() -> None:
         "scaling": scaling.run,
         "kernel": kernels_bench.run,
         "throughput": throughput.run,
+        "store": store_bench.run,
     }
     pick = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

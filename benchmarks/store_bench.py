@@ -1,0 +1,102 @@
+"""Store subsystem benchmark: spill-and-merge build + query serving.
+
+Builds a persistent store from a >=10k-doc synthetic collection through a
+SpillSink whose memory budget is far below the distinct-pair count (forcing
+multi-run spill-and-merge), then drives batched top-k and pair-count
+queries — and checks both against the naive dense oracle, so the benchmark
+doubles as an end-to-end exactness gate (ISSUE 1 acceptance criterion).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core.cooc import count_to_store, dense_counts
+from repro.data.corpus import synthetic_zipf_collection
+from repro.store import QueryEngine
+
+DOCS = 10_000
+VOCAB = 2_048
+MEAN_LEN = 30
+BUDGET_PAIRS = 200_000  # far below the distinct-pair count -> many spills
+QUERY_BATCH = 128
+TOPK = 10
+
+
+def run() -> list[str]:
+    rows = []
+    c = synthetic_zipf_collection(DOCS, vocab=VOCAB, mean_len=MEAN_LEN, seed=5)
+
+    # ------------------------------------------------------------- build
+    store_path = os.path.join(tempfile.mkdtemp(prefix="store_bench_"), "store")
+    (store, seg), build_s = time_call(
+        count_to_store, "list-scan", c, store_path,
+        memory_budget_pairs=BUDGET_PAIRS,
+    )
+    assert seg.nnz > BUDGET_PAIRS, "budget did not force spills"
+    rows.append(
+        row(
+            f"store/build/docs_{DOCS}",
+            build_s * 1e6,
+            f"pairs={seg.nnz};docs_per_hour={DOCS / build_s * 3600:.0f};"
+            f"budget={BUDGET_PAIRS}",
+        )
+    )
+
+    # ------------------------------------------- exactness vs naive oracle
+    oracle = dense_counts("naive", c)
+    sym = oracle + oracle.T
+    engine = QueryEngine(store)
+    rng = np.random.default_rng(11)
+
+    terms = rng.integers(0, VOCAB, size=QUERY_BATCH)
+    ids, scores = engine.topk(terms, k=TOPK, score="count")
+    for b, t in enumerate(terms):
+        want = np.sort(sym[t])[::-1][:TOPK]
+        got = np.where(ids[b] >= 0, scores[b], 0).astype(np.int64)
+        assert np.array_equal(np.sort(got)[::-1], want), f"topk mismatch term {t}"
+        for i, s in zip(ids[b], scores[b]):
+            if i >= 0:
+                assert sym[t][i] == s, f"count mismatch ({t},{i})"
+
+    pairs = rng.integers(0, VOCAB, size=(2_000, 2))
+    got = engine.pair_counts(pairs)
+    lo = np.minimum(pairs[:, 0], pairs[:, 1])
+    hi = np.maximum(pairs[:, 0], pairs[:, 1])
+    want = np.where(lo == hi, 0, oracle[lo, hi])
+    assert np.array_equal(got, want), "pair counts mismatch"
+
+    # ---------------------------------------------------------- throughput
+    def topk_batch():
+        engine.topk(rng.integers(0, VOCAB, size=QUERY_BATCH), k=TOPK)
+
+    topk_batch()  # jit warm-up
+    _, tk_s = time_call(topk_batch, repeats=20)
+    rows.append(
+        row(
+            f"store/query_topk/batch_{QUERY_BATCH}",
+            tk_s * 1e6,
+            f"qps={QUERY_BATCH / tk_s:.0f};exact=1",
+        )
+    )
+
+    def pair_batch():
+        engine.pair_counts(rng.integers(0, VOCAB, size=(QUERY_BATCH, 2)))
+
+    _, pc_s = time_call(pair_batch, repeats=20)
+    rows.append(
+        row(
+            f"store/query_pairs/batch_{QUERY_BATCH}",
+            pc_s * 1e6,
+            f"qps={QUERY_BATCH / pc_s:.0f};exact=1",
+        )
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,55 @@
+"""Walkthrough: count a collection into a persistent store, then query it.
+
+    PYTHONPATH=src python examples/query_store.py
+
+Covers the full store lifecycle: build through a memory-budgeted SpillSink,
+point pair lookups, batched top-k under three scores, an exact incremental
+append of new documents, and compaction back to one segment.
+"""
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core.cooc import count_to_store
+from repro.data.corpus import synthetic_zipf_collection
+from repro.store import QueryEngine, Store
+
+store_path = os.path.join(tempfile.mkdtemp(prefix="cooc_example_"), "store")
+
+# 1. Count 2000 documents into a store. The 50k-pair budget is far below the
+#    distinct-pair count, so the builder spills sorted runs and k-way-merges
+#    them into a memory-mapped CSR segment.
+c = synthetic_zipf_collection(2_000, vocab=2_000, mean_len=30, seed=0)
+store, seg = count_to_store(
+    "list-scan", c, store_path, memory_budget_pairs=50_000
+)
+print(f"built {store_path}: {seg.nnz} distinct pairs from {c.num_docs} docs")
+
+# 2. Point lookups: how often do terms 0 and 1 co-occur?
+print("pair_count(0, 1) =", store.pair_count(0, 1))
+
+# 3. Batched top-k neighbours under raw count, PMI, and Dice.
+engine = QueryEngine(store)
+terms = np.array([0, 1, 2, 3])
+for score in ["count", "pmi", "dice"]:
+    ids, scores = engine.topk(terms, k=5, score=score)
+    print(f"top-5 by {score}: term 0 ->",
+          list(zip(ids[0].tolist(), np.round(scores[0], 3).tolist())))
+
+# 4. Exact incremental append: new documents arrive, only a new segment is
+#    written; queries now reflect the union of both batches.
+c2 = synthetic_zipf_collection(500, vocab=2_000, mean_len=30, seed=1)
+store.append_collection(c2, method="list-scan", memory_budget_pairs=50_000)
+print(f"after append: {len(store.segment_names)} segments, "
+      f"{store.num_docs} docs, pair_count(0, 1) = {store.pair_count(0, 1)}")
+
+# 5. Compaction merges segments back into one; counts are unchanged.
+store.compact()
+print(f"after compact: {len(store.segment_names)} segment, "
+      f"pair_count(0, 1) = {store.pair_count(0, 1)}")
+
+# 6. The store can be reopened from disk by a serving process.
+reopened = Store.open(store_path)
+print("reopened:", reopened.num_docs, "docs,", reopened.total_count, "pair mass")

@@ -29,7 +29,7 @@ import numpy as np
 
 
 def _flatten(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
              for path, _ in flat]
     leaves = [leaf for _, leaf in flat]

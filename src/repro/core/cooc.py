@@ -47,3 +47,32 @@ def dense_counts(method: str, c: Collection, **kwargs) -> np.ndarray:
     """Convenience for tests: dense strict-upper count matrix."""
     sink, _ = count(method, c, DenseSink(c.vocab_size), **kwargs)
     return sink.mat
+
+
+def count_to_store(
+    method: str,
+    c: Collection,
+    store_path: str,
+    *,
+    memory_budget_pairs: int = 4 << 20,
+    **kwargs,
+):
+    """Count ``c`` with ``method`` straight into a persistent queryable store
+    (repro.store): output streams through a budgeted SpillSink, so the
+    counting phase holds O(memory_budget_pairs) pairs instead of a dense V×V
+    matrix. Creates the store if ``store_path`` is new, else appends a
+    segment (exact incremental update). Returns (store, segment)."""
+    from repro.store import Store  # deferred: store wires back into count()
+
+    if Store.exists(store_path):
+        store = Store.open(store_path)
+        if store.vocab_size != c.vocab_size:
+            raise ValueError(
+                f"store vocab {store.vocab_size} != collection vocab {c.vocab_size}"
+            )
+    else:
+        store = Store.create(store_path, c.vocab_size)
+    seg = store.append_collection(
+        c, method=method, memory_budget_pairs=memory_budget_pairs, **kwargs
+    )
+    return store, seg

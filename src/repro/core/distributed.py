@@ -33,6 +33,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# pre-0.5 releases keep shard_map under jax.experimental and have no pvary
+# (there, unmapped constants are already treated as varying)
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+_pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
 
 def _local_gram_allgather(B_local: jax.Array, *, model_axis: str, doc_axes) -> jax.Array:
     B_all = jax.lax.all_gather(B_local, model_axis, axis=1, tiled=True)  # (D_loc, V)
@@ -42,8 +50,9 @@ def _local_gram_allgather(B_local: jax.Array, *, model_axis: str, doc_axes) -> j
     return jax.lax.psum_scatter(partial, doc_axes, scatter_dimension=0, tiled=True)
 
 
-def _local_gram_ring(B_local: jax.Array, *, model_axis: str, doc_axes) -> jax.Array:
-    n = jax.lax.axis_size(model_axis)
+def _local_gram_ring(
+    B_local: jax.Array, *, model_axis: str, doc_axes, n: int
+) -> jax.Array:
     my = jax.lax.axis_index(model_axis)
     v_loc = B_local.shape[1]
 
@@ -52,7 +61,7 @@ def _local_gram_ring(B_local: jax.Array, *, model_axis: str, doc_axes) -> jax.Ar
     # fori_loop body would be counted once), and the compiler can pipeline
     # step k's permute against step k+1's matmul
     acc = jnp.zeros((v_loc, v_loc * n), dtype=jnp.float32)
-    acc = jax.lax.pvary(acc, tuple(doc_axes) + (model_axis,))
+    acc = _pvary(acc, tuple(doc_axes) + (model_axis,))
     buf = B_local
     for k in range(n):
         src = (my + k) % n  # global block id currently held in buf
@@ -82,9 +91,13 @@ def make_distributed_gram(
     """
     doc_axes = tuple(a for a in mesh.axis_names if a != model_axis)
     fn = {"allgather": _local_gram_allgather, "ring": _local_gram_ring}[schedule]
-    local = functools.partial(fn, model_axis=model_axis, doc_axes=doc_axes)
+    kwargs = dict(model_axis=model_axis, doc_axes=doc_axes)
+    if schedule == "ring":
+        # ring length must be a trace-time constant (static python loop)
+        kwargs["n"] = dict(mesh.shape)[model_axis]
+    local = functools.partial(fn, **kwargs)
 
-    shard = jax.shard_map(
+    shard = _shard_map(
         local,
         mesh=mesh,
         in_specs=(P(doc_axes, model_axis),),

@@ -96,18 +96,23 @@ class FileSink:
         self.f.close()
 
 
-def read_pair_file(path: str):
-    """Inverse of FileSink, for round-trip tests."""
-    rows = []
+def iter_pair_file(path: str):
+    """Stream (primary, secondaries, counts) rows from a FileSink-format
+    file without loading it whole (the store's run-merge reads spill files
+    through this)."""
     with open(path, "rb") as f:
         while True:
             hdr = f.read(8)
             if not hdr:
-                break
+                return
             primary, n = struct.unpack("<II", hdr)
             buf = np.frombuffer(f.read(8 * n), dtype=np.uint32)
-            rows.append((primary, buf[0::2].copy(), buf[1::2].copy()))
-    return rows
+            yield primary, buf[0::2].copy(), buf[1::2].copy()
+
+
+def read_pair_file(path: str):
+    """Inverse of FileSink, for round-trip tests."""
+    return list(iter_pair_file(path))
 
 
 def emit_dense_rows(

@@ -1,0 +1,144 @@
+"""Co-occurrence query serving driver (the statistic's serving side).
+
+    PYTHONPATH=src python -m repro.launch.cooc_serve --docs 5000 --vocab 4096 \
+        --method list-scan --queries 2000 --batch 64 --topk 10 --score pmi
+
+Builds (or opens, with --store) a persistent co-occurrence store, then
+replays a Zipf-skewed query workload — the access pattern of real serving
+traffic, where popular terms dominate — through the batched QueryEngine.
+Reports build throughput plus per-batch latency percentiles and QPS for
+both top-k and pair-count queries, mirroring launch/serve.py's role for the
+LM stack.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.cooc import count_to_store
+from repro.data.corpus import _zipf_probs, synthetic_zipf_collection
+from repro.store import QueryEngine, Store
+
+
+def _percentiles(lat_s: list[float]) -> dict:
+    a = np.asarray(lat_s) * 1e3
+    return {
+        "p50_ms": round(float(np.percentile(a, 50)), 3),
+        "p95_ms": round(float(np.percentile(a, 95)), 3),
+        "p99_ms": round(float(np.percentile(a, 99)), 3),
+    }
+
+
+def serve(
+    docs: int = 5_000,
+    vocab: int = 4_096,
+    method: str = "list-scan",
+    store_path: str | None = None,
+    budget_pairs: int = 1 << 20,
+    queries: int = 2_000,
+    batch: int = 64,
+    topk: int = 10,
+    score: str = "count",
+    seed: int = 0,
+) -> dict:
+    # ------------------------------------------------------------ build/open
+    if store_path and Store.exists(store_path):
+        store = Store.open(store_path)
+        build_s = 0.0
+    else:
+        store_path = store_path or os.path.join(
+            tempfile.mkdtemp(prefix="cooc_store_"), "store"
+        )
+        c = synthetic_zipf_collection(docs, vocab=vocab, mean_len=40, seed=seed)
+        t0 = time.perf_counter()
+        store, seg = count_to_store(
+            method, c, store_path, memory_budget_pairs=budget_pairs
+        )
+        build_s = time.perf_counter() - t0
+        print(
+            f"[build] {seg.nnz} pairs from {docs} docs in {build_s:.2f}s "
+            f"({docs / build_s * 3600:.0f} docs/hour) -> {store_path}"
+        )
+
+    engine = QueryEngine(store)
+    V = store.vocab_size
+    rng = np.random.default_rng(seed + 1)
+    # Zipf-skewed term popularity: hot terms get most of the traffic
+    probs = _zipf_probs(V, 1.0)
+    df_order = np.argsort(-store.df(), kind="stable")
+
+    def draw_terms(n):
+        return df_order[rng.choice(V, size=n, p=probs)]
+
+    # ------------------------------------------------------------- top-k
+    n_batches = max(queries // batch, 1)
+    # warm up the jit cache before timing
+    engine.topk(draw_terms(batch), k=topk, score=score)
+    lat = []
+    for _ in range(n_batches):
+        terms = draw_terms(batch)
+        t0 = time.perf_counter()
+        engine.topk(terms, k=topk, score=score)
+        lat.append(time.perf_counter() - t0)
+    topk_stats = _percentiles(lat)
+    topk_qps = round(n_batches * batch / sum(lat))
+
+    # -------------------------------------------------------- pair counts
+    lat_pc = []
+    for _ in range(n_batches):
+        pairs = np.stack([draw_terms(batch), draw_terms(batch)], axis=1)
+        t0 = time.perf_counter()
+        engine.pair_counts(pairs)
+        lat_pc.append(time.perf_counter() - t0)
+    pair_stats = _percentiles(lat_pc)
+    pair_qps = round(n_batches * batch / sum(lat_pc))
+
+    stats = {
+        "store": store_path,
+        "segments": len(store.segment_names),
+        "num_docs": store.num_docs,
+        "build_s": round(build_s, 2),
+        "score": score,
+        "batch": batch,
+        "topk_qps": topk_qps,
+        **{f"topk_{k}": v for k, v in topk_stats.items()},
+        "pair_qps": pair_qps,
+        **{f"pair_{k}": v for k, v in pair_stats.items()},
+        "row_cache": dict(engine.stats),
+    }
+    print(stats)
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=5_000)
+    ap.add_argument("--vocab", type=int, default=4_096)
+    ap.add_argument("--method", default="list-scan")
+    ap.add_argument("--store", default=None, help="reuse/persist a store dir")
+    ap.add_argument("--budget-pairs", type=int, default=1 << 20)
+    ap.add_argument("--queries", type=int, default=2_000)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--score", default="count", choices=["count", "pmi", "dice"])
+    args = ap.parse_args()
+    serve(
+        args.docs,
+        args.vocab,
+        args.method,
+        args.store,
+        args.budget_pairs,
+        args.queries,
+        args.batch,
+        args.topk,
+        args.score,
+    )
+
+
+if __name__ == "__main__":
+    main()

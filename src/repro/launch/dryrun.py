@@ -20,11 +20,13 @@ import traceback  # noqa: E402
 
 import jax  # noqa: E402
 
+from repro.runtime.sharding import set_mesh_compat as _set_mesh  # noqa: E402
+
 
 def _compile(cell, mesh):
     # set_mesh (not just `with mesh`) so in-model with_sharding_constraint
     # (maybe_shard) sees the abstract mesh during tracing
-    with jax.set_mesh(mesh):
+    with _set_mesh(mesh):
         jitted = jax.jit(cell.fn, donate_argnums=cell.donate)
         lowered = jitted.lower(*cell.args)
         return lowered.compile()

@@ -312,7 +312,7 @@ def _recsys_batch_sds(cfg, B, mesh, with_label=True):
 def _recsys_dense_params(cfg) -> int:
     shapes = recsys_mod.param_shapes(cfg)
     total = 0
-    for path, s in jax.tree.flatten_with_path(
+    for path, s in jax.tree_util.tree_flatten_with_path(
         shapes, is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, int) for i in x)
     )[0]:
         name = str(getattr(path[-1], "key", path[-1]))

@@ -47,7 +47,7 @@ def param_shapes(cfg: GNNConfig) -> dict:
 
 def init_params(key: jax.Array, cfg: GNNConfig) -> dict:
     shapes = param_shapes(cfg)
-    flat, treedef = jax.tree.flatten_with_path(
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
         shapes, is_leaf=lambda x: isinstance(x, tuple)
     )
     keys = jax.random.split(key, len(flat))

@@ -178,12 +178,21 @@ def init_ffn(key, d_model: int, d_ff: int, kind: str, dtype) -> dict:
 
 
 # ------------------------------------------------------- sharding helper
+def _active_abstract_mesh():
+    """jax.sharding.get_abstract_mesh where available; older releases expose
+    it under jax._src.mesh (returning () outside any mesh context)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        from jax._src.mesh import get_abstract_mesh as get
+    return get()
+
+
 def maybe_shard(x: jax.Array, *axes) -> jax.Array:
     """with_sharding_constraint that degrades to a no-op outside a mesh
     context (CPU unit tests). Each entry of ``axes`` is an axis name, a tuple
     of names, or None; names absent from the active mesh are dropped."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
+    mesh = _active_abstract_mesh()
+    if mesh is None or not getattr(mesh, "axis_names", ()):
         return x
     avail = set(mesh.axis_names)
 
@@ -304,12 +313,20 @@ def moe_ffn_ep(
     no GSPMD reshard guessing (which materializes the dispatch buffer
     globally — the failure mode this function exists to avoid).
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or "model" not in (mesh.axis_names or ()):
+    mesh = _active_abstract_mesh()
+    if mesh is None or "model" not in (getattr(mesh, "axis_names", None) or ()):
         return moe_ffn(
             params, x, n_experts=n_experts, top_k=top_k,
             capacity_factor=capacity_factor, expert_kind=expert_kind,
         )
+    if not hasattr(jax, "shard_map"):
+        # pre-0.5 shard_map mis-lowers over an AbstractMesh inside jit
+        # (SPMD partitioner shape RET_CHECK); use the resource-env mesh
+        from jax._src.mesh import thread_resources
+
+        concrete = thread_resources.env.physical_mesh
+        if getattr(concrete, "axis_names", None):
+            mesh = concrete
     from jax.sharding import PartitionSpec as P
 
     dp = tuple(a for a in mesh.axis_names if a != "model")
@@ -398,7 +415,13 @@ def moe_ffn_ep(
         return y.reshape(Bl, S, d).astype(x_loc.dtype), aux
 
     w_gate = params.get("w_gate", params["w_in"][:, :, :0])  # dummy when ungated
-    y, aux = jax.shard_map(
+    shard_map = getattr(jax, "shard_map", None)
+    extra = {}
+    if shard_map is None:  # pre-0.5 home; its replication checker rejects
+        from jax.experimental.shard_map import shard_map  # the pmean path
+
+        extra = {"check_rep": False}
+    y, aux = shard_map(
         region,
         mesh=mesh,
         in_specs=(
@@ -409,6 +432,7 @@ def moe_ffn_ep(
             P("model", dp, None),
         ),
         out_specs=(P(batch_axes, None, None), P()),
+        **extra,
     )(x, params["router"], params["w_in"], params["w_out"], w_gate)
 
     if "shared" in params:

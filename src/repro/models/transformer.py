@@ -179,7 +179,9 @@ def param_shapes(cfg: LMConfig) -> dict:
 def init_params(key: jax.Array, cfg: LMConfig) -> dict:
     """Random init matching param_shapes. Norm scales start at 1."""
     shapes = param_shapes(cfg)
-    flat, treedef = jax.tree.flatten_with_path(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple)
+    )
     keys = jax.random.split(key, len(flat))
     leaves = []
     for (path, shape), k in zip(flat, keys):

@@ -14,8 +14,29 @@ model) — divisibility is only required in our own shard_map code paths.
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
 from jax.sharding import PartitionSpec as P
+
+
+def set_mesh_compat(mesh):
+    """jax.set_mesh where it exists. On pre-0.5 releases, combine the legacy
+    resource-env context (``with mesh`` — what with_sharding_constraint
+    consults) with set_abstract_mesh (what maybe_shard consults) WITHOUT the
+    experimental sharding_in_types flag jax._src.mesh.set_mesh flips there,
+    which breaks plain jnp indexing during tracing."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    from jax._src.mesh import set_abstract_mesh
+
+    @contextlib.contextmanager
+    def _ctx():
+        with mesh, set_abstract_mesh(mesh.abstract_mesh):
+            yield
+
+    return _ctx()
 
 
 def fsdp_axes(mesh) -> tuple:

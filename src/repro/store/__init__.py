@@ -1,0 +1,22 @@
+"""Persistent, queryable co-occurrence store.
+
+Layers: ``builder`` (SpillSink: budgeted spill-and-merge from any PairSink
+producer) → ``csr_store`` (immutable mmap CSR segments) → ``segments``
+(LSM manifest: incremental append, shard ingest, compaction) → ``query``
+(batched pair/top-k/PMI engine). See README §Store for the on-disk layout.
+"""
+
+from repro.store.builder import SpillSink, merge_row_streams
+from repro.store.csr_store import CSRSegment, segment_from_pair_file, write_segment
+from repro.store.query import QueryEngine
+from repro.store.segments import Store
+
+__all__ = [
+    "SpillSink",
+    "merge_row_streams",
+    "CSRSegment",
+    "segment_from_pair_file",
+    "write_segment",
+    "QueryEngine",
+    "Store",
+]

@@ -1,0 +1,215 @@
+"""Spill-and-merge store builder.
+
+``SpillSink`` implements the ``PairSink`` protocol, so **any** counting
+method in ``core/cooc.py`` (and any per-shard worker of
+``core/distributed.py``) can stream its output here instead of into a dense
+V×V matrix. Rows are buffered as packed int64 pair keys under a configurable
+memory budget; when the budget is hit, the buffer is sorted, duplicate pairs
+are aggregated, and the result is spilled to disk as a sorted run in the
+paper's binary pair format (§2 NAÏVE's "sorted runs + merge" discipline,
+generalized to every method). Finalization k-way-merges all runs plus the
+live buffer into an immutable CSR segment. Counting and merging stay within
+O(budget) memory regardless of the distinct-pair count; the one O(nnz)
+step left is the segment's symmetric-adjacency derivation (see
+csr_store._write_symmetric).
+"""
+
+from __future__ import annotations
+
+import heapq
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core.types import FileSink, iter_pair_file
+
+
+def sum_by_key(keys: np.ndarray, cnts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Aggregate duplicate keys: returns (sorted unique keys, summed int64
+    counts). The one aggregation primitive behind spilling, run merging, and
+    multi-segment neighbourhood merging."""
+    order = np.argsort(keys, kind="stable")
+    keys, cnts = keys[order], np.asarray(cnts, dtype=np.int64)[order]
+    uniq, start = np.unique(keys, return_index=True)
+    return uniq, np.add.reduceat(cnts, start)
+
+
+def _iter_run(path: str):
+    """Stream int64 rows from a run file (paper binary format, primaries
+    strictly ascending within a run)."""
+    for primary, secs, cnts in iter_pair_file(path):
+        yield int(primary), secs.astype(np.int64), cnts.astype(np.int64)
+
+
+def merge_row_streams(streams):
+    """K-way merge of row streams (each with strictly ascending primaries and
+    sorted unique secondaries). Yields (primary, secondaries, counts) with
+    strictly ascending primaries, duplicate pairs summed — the exact input
+    shape ``csr_store.write_segment`` expects. Streams are consumed lazily,
+    so memory is O(k · max row), not O(total pairs)."""
+    streams = [iter(s) for s in streams]
+    heap = []
+    for idx, it in enumerate(streams):
+        first = next(it, None)
+        if first is not None:
+            heap.append((first[0], idx, first))
+    heapq.heapify(heap)
+    while heap:
+        primary = heap[0][0]
+        secs_parts, cnts_parts = [], []
+        while heap and heap[0][0] == primary:
+            _, idx, (_, secs, cnts) = heapq.heappop(heap)
+            secs_parts.append(secs)
+            cnts_parts.append(cnts)
+            nxt = next(streams[idx], None)
+            if nxt is not None:
+                heapq.heappush(heap, (nxt[0], idx, nxt))
+        if len(secs_parts) == 1:
+            secs = np.asarray(secs_parts[0], dtype=np.int64)
+            cnts = np.asarray(cnts_parts[0], dtype=np.int64)
+        else:
+            secs, cnts = sum_by_key(
+                np.concatenate(secs_parts).astype(np.int64),
+                np.concatenate(cnts_parts),
+            )
+        yield primary, secs, cnts
+
+
+def _rows_from_sorted_keys(keys: np.ndarray, cnts: np.ndarray, V: int):
+    """Split sorted unique packed keys into per-primary rows."""
+    if len(keys) == 0:
+        return
+    primaries = keys // V
+    secondaries = keys % V
+    starts = np.concatenate(
+        [[0], np.nonzero(np.diff(primaries))[0] + 1, [len(keys)]]
+    )
+    for s, e in zip(starts[:-1], starts[1:]):
+        if e > s:
+            yield int(primaries[s]), secondaries[s:e], cnts[s:e]
+
+
+class SpillSink:
+    """PairSink that spills sorted aggregated runs to disk under a memory
+    budget (measured in buffered pair entries, ~16 bytes each)."""
+
+    def __init__(
+        self,
+        vocab_size: int,
+        *,
+        memory_budget_pairs: int = 4 << 20,
+        spill_dir: str | None = None,
+    ):
+        if memory_budget_pairs < 1:
+            raise ValueError("memory_budget_pairs must be >= 1")
+        self.vocab_size = vocab_size
+        self.memory_budget_pairs = memory_budget_pairs
+        self._own_dir = spill_dir is None
+        self.spill_dir = spill_dir or tempfile.mkdtemp(prefix="cooc_spill_")
+        os.makedirs(self.spill_dir, exist_ok=True)
+        self.runs: list[str] = []
+        self._keys: list[np.ndarray] = []
+        self._cnts: list[np.ndarray] = []
+        self._buffered = 0
+        self.stats = {"spills": 0, "pairs_in": 0, "spilled_bytes": 0}
+
+    # ------------------------------------------------------ PairSink API
+    def emit_row(self, primary, secondaries, counts):
+        if len(secondaries) == 0:
+            return
+        keys = np.int64(primary) * self.vocab_size + np.asarray(
+            secondaries, dtype=np.int64
+        )
+        self._push(keys, counts)
+
+    def emit_col(self, secondary, primaries, counts):
+        """Column-order emission (FREQ-SPLIT tail path)."""
+        if len(primaries) == 0:
+            return
+        keys = np.asarray(primaries, dtype=np.int64) * self.vocab_size + np.int64(
+            secondary
+        )
+        self._push(keys, counts)
+
+    def _push(self, keys: np.ndarray, counts) -> None:
+        self._keys.append(keys)
+        self._cnts.append(np.asarray(counts, dtype=np.int64))
+        self._buffered += len(keys)
+        self.stats["pairs_in"] += len(keys)
+        if self._buffered >= self.memory_budget_pairs:
+            self._spill()
+
+    # ---------------------------------------------------------- spilling
+    def _drain_buffer(self) -> tuple[np.ndarray, np.ndarray]:
+        """Sort + aggregate the live buffer into unique (key, count) arrays."""
+        keys = np.concatenate(self._keys)
+        cnts = np.concatenate(self._cnts)
+        self._keys, self._cnts, self._buffered = [], [], 0
+        return sum_by_key(keys, cnts)
+
+    def _spill(self) -> None:
+        if self._buffered == 0:
+            return
+        keys, cnts = self._drain_buffer()
+        if len(cnts) and int(cnts.max()) >= 1 << 32:
+            # the run format stores counts as u32 (paper format); a single
+            # buffer can only exceed that when fed pre-aggregated counts
+            raise OverflowError(
+                f"aggregated count {int(cnts.max())} exceeds the u32 run "
+                "format; lower memory_budget_pairs or pre-split the input"
+            )
+        path = os.path.join(self.spill_dir, f"run_{len(self.runs):05d}.bin")
+        run_sink = FileSink(path)
+        for primary, secs, row_cnts in _rows_from_sorted_keys(
+            keys, cnts, self.vocab_size
+        ):
+            run_sink.emit_row(primary, secs, row_cnts)
+        run_sink.close()
+        self.runs.append(path)
+        self.stats["spills"] += 1
+        self.stats["spilled_bytes"] += os.path.getsize(path)
+
+    # --------------------------------------------------------- finalize
+    def merged_rows(self):
+        """Iterator of fully merged (primary, secondaries, counts) rows
+        across all spilled runs and the live buffer. May be consumed once."""
+        streams = [_iter_run(p) for p in self.runs]
+        if self._buffered:
+            keys, cnts = self._drain_buffer()
+            streams.append(_rows_from_sorted_keys(keys, cnts, self.vocab_size))
+        return merge_row_streams(streams)
+
+    def finalize_segment(
+        self,
+        out_dir: str,
+        *,
+        df: np.ndarray | None = None,
+        num_docs: int = 0,
+        source: str = "spill",
+    ):
+        """Merge everything into a CSR segment at ``out_dir`` and clean up
+        the spill files. Returns the opened ``CSRSegment``."""
+        from repro.store.csr_store import CSRSegment, write_segment
+
+        write_segment(
+            out_dir,
+            self.merged_rows(),
+            self.vocab_size,
+            df=df,
+            num_docs=num_docs,
+            source=source,
+        )
+        self.close()
+        return CSRSegment(out_dir)
+
+    def close(self) -> None:
+        """Delete spill files (and the spill dir if we created it)."""
+        for p in self.runs:
+            if os.path.exists(p):
+                os.remove(p)
+        self.runs = []
+        self._keys, self._cnts, self._buffered = [], [], 0
+        if self._own_dir and os.path.isdir(self.spill_dir):
+            shutil.rmtree(self.spill_dir, ignore_errors=True)

@@ -1,0 +1,272 @@
+"""Memory-mapped CSR pair-count segments.
+
+A segment is an immutable directory holding the strict-upper co-occurrence
+counts of one document batch as CSR arrays, memory-mapped at open so a
+serving process touches only the pages a query needs:
+
+    meta.json         vocab_size, nnz, num_docs, total_count, source
+    row_ptr.bin       int64[V+1]   CSR row pointers (dense over the vocab)
+    cols.bin          int32[nnz]   secondary term IDs, ascending per row
+    counts.bin        int64[nnz]   exact pair counts
+    df.bin            int64[V]     per-term document frequencies (0 if unknown)
+    sym_row_ptr.bin   int64[V+1]   symmetric adjacency (t -> all neighbours,
+    sym_cols.bin      int32[2nnz]   both directions), what top-k queries walk
+    sym_counts.bin    int64[2nnz]
+
+Lookup costs: ``row``/``neighbours`` are O(1) pointer arithmetic on the
+mmap; ``pair_count`` is a binary search within one row, O(log deg). The
+strict-upper CSR is the canonical artifact and round-trips with the paper's
+binary pair format (``FileSink`` / ``read_pair_file``); the symmetric
+adjacency is derived from it at write time so neighbourhood queries never
+scan the whole matrix.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.types import FileSink, PairSink, read_pair_file
+
+META_NAME = "meta.json"
+FORMAT_VERSION = 1
+
+_ARRAYS = {
+    "row_ptr": np.int64,
+    "cols": np.int32,
+    "counts": np.int64,
+    "df": np.int64,
+    "sym_row_ptr": np.int64,
+    "sym_cols": np.int32,
+    "sym_counts": np.int64,
+}
+
+
+def _write_array(path: str, arr: np.ndarray, dtype) -> None:
+    np.ascontiguousarray(arr, dtype=dtype).tofile(path)
+
+
+def write_segment(
+    out_dir: str,
+    rows,
+    vocab_size: int,
+    *,
+    df: np.ndarray | None = None,
+    num_docs: int = 0,
+    source: str = "",
+) -> str:
+    """Materialize a segment from ``rows`` — an iterator of
+    ``(primary, secondaries, counts)`` with strictly ascending primaries and,
+    within each row, strictly ascending unique secondaries (the shape
+    ``builder.merge_row_streams`` produces). Returns ``out_dir``.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    V = vocab_size
+    row_ptr = np.zeros(V + 1, dtype=np.int64)
+    nnz = 0
+    total = 0
+    last_primary = -1
+    with open(os.path.join(out_dir, "cols.bin"), "wb") as fc, open(
+        os.path.join(out_dir, "counts.bin"), "wb"
+    ) as fn:
+        for primary, secs, cnts in rows:
+            if primary <= last_primary:
+                raise ValueError(
+                    f"rows must have strictly ascending primaries; "
+                    f"got {primary} after {last_primary}"
+                )
+            last_primary = primary
+            n = len(secs)
+            if n == 0:
+                continue
+            row_ptr[primary + 1] = n
+            nnz += n
+            total += int(np.asarray(cnts, dtype=np.int64).sum())
+            fc.write(np.ascontiguousarray(secs, dtype=np.int32).tobytes())
+            fn.write(np.ascontiguousarray(cnts, dtype=np.int64).tobytes())
+    np.cumsum(row_ptr, out=row_ptr)
+    _write_array(os.path.join(out_dir, "row_ptr.bin"), row_ptr, np.int64)
+
+    if df is None:
+        df = np.zeros(V, dtype=np.int64)
+    _write_array(os.path.join(out_dir, "df.bin"), df, np.int64)
+
+    _write_symmetric(out_dir, row_ptr, V, nnz)
+
+    meta = {
+        "format_version": FORMAT_VERSION,
+        "vocab_size": V,
+        "nnz": nnz,
+        "num_docs": int(num_docs),
+        "total_count": total,
+        "source": source,
+    }
+    with open(os.path.join(out_dir, META_NAME), "w") as f:
+        json.dump(meta, f, indent=2)
+    return out_dir
+
+
+def _write_symmetric(out_dir: str, row_ptr: np.ndarray, V: int, nnz: int) -> None:
+    """Derive the symmetric adjacency from the on-disk upper CSR: every pair
+    (i, j, c) contributes j to row i and i to row j. One vectorized pass.
+
+    NOTE: this materializes O(nnz) working arrays (doubled COO + lexsort),
+    so segment *finalization* peaks at O(nnz) memory even though counting
+    and spilling stay within the SpillSink budget. An external-memory
+    adjacency build is a ROADMAP open item."""
+    cols = np.fromfile(os.path.join(out_dir, "cols.bin"), dtype=np.int32)
+    counts = np.fromfile(os.path.join(out_dir, "counts.bin"), dtype=np.int64)
+    rows = np.repeat(
+        np.arange(V, dtype=np.int32), np.diff(row_ptr).astype(np.int64)
+    )
+    # doubled COO (both directions), lexsorted to (row, col) order — neighbour
+    # IDs come out ascending per row, ready for binary search
+    r2 = np.concatenate([rows, cols])
+    c2 = np.concatenate([cols, rows])
+    v2 = np.concatenate([counts, counts])
+    order = np.lexsort((c2, r2))
+    sym_cols = c2[order].astype(np.int32)
+    sym_counts = v2[order]
+    sym_ptr = np.zeros(V + 1, dtype=np.int64)
+    np.cumsum(np.bincount(r2, minlength=V), out=sym_ptr[1:])
+    _write_array(os.path.join(out_dir, "sym_row_ptr.bin"), sym_ptr, np.int64)
+    _write_array(os.path.join(out_dir, "sym_cols.bin"), sym_cols, np.int32)
+    _write_array(os.path.join(out_dir, "sym_counts.bin"), sym_counts, np.int64)
+
+
+class CSRSegment:
+    """Read-only memory-mapped view of one segment directory."""
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(os.path.join(path, META_NAME)) as f:
+            self.meta = json.load(f)
+        if self.meta["format_version"] != FORMAT_VERSION:
+            raise ValueError(f"unsupported segment format {self.meta}")
+        self.vocab_size = self.meta["vocab_size"]
+        self.nnz = self.meta["nnz"]
+        self.num_docs = self.meta["num_docs"]
+        self.total_count = self.meta["total_count"]
+        self._arrays: dict[str, np.ndarray] = {}
+
+    def _arr(self, name: str) -> np.ndarray:
+        if name not in self._arrays:
+            path = os.path.join(self.path, f"{name}.bin")
+            dtype = _ARRAYS[name]
+            if os.path.getsize(path) == 0:  # mmap rejects empty files
+                self._arrays[name] = np.zeros(0, dtype=dtype)
+            else:
+                self._arrays[name] = np.memmap(path, dtype=dtype, mode="r")
+        return self._arrays[name]
+
+    @property
+    def df(self) -> np.ndarray:
+        return self._arr("df")
+
+    # ---------------------------------------------------------- lookups
+    def row(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        """Strict-upper row of ``t``: (secondaries > t, counts)."""
+        ptr = self._arr("row_ptr")
+        lo, hi = int(ptr[t]), int(ptr[t + 1])
+        return self._arr("cols")[lo:hi], self._arr("counts")[lo:hi]
+
+    def neighbours(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        """All co-occurring terms of ``t`` (both directions), ascending IDs."""
+        ptr = self._arr("sym_row_ptr")
+        lo, hi = int(ptr[t]), int(ptr[t + 1])
+        return self._arr("sym_cols")[lo:hi], self._arr("sym_counts")[lo:hi]
+
+    def pair_count(self, i: int, j: int) -> int:
+        """Exact count of the unordered pair {i, j}; O(log deg)."""
+        if i == j:
+            return 0
+        lo, hi = (i, j) if i < j else (j, i)
+        secs, cnts = self.row(lo)
+        k = np.searchsorted(secs, hi)
+        if k < len(secs) and secs[k] == hi:
+            return int(cnts[k])
+        return 0
+
+    def pair_counts(self, pairs: np.ndarray) -> np.ndarray:
+        """Batched pair lookup: (B, 2) int array -> int64[B]."""
+        pairs = np.asarray(pairs, dtype=np.int64)
+        out = np.zeros(len(pairs), dtype=np.int64)
+        ptr = self._arr("row_ptr")
+        cols, counts = self._arr("cols"), self._arr("counts")
+        lo = np.minimum(pairs[:, 0], pairs[:, 1])
+        hi = np.maximum(pairs[:, 0], pairs[:, 1])
+        for b in range(len(pairs)):
+            if lo[b] == hi[b]:
+                continue
+            s, e = int(ptr[lo[b]]), int(ptr[lo[b] + 1])
+            k = s + np.searchsorted(cols[s:e], hi[b])
+            if k < e and cols[k] == hi[b]:
+                out[b] = counts[k]
+        return out
+
+    # -------------------------------------------------------- iteration
+    def iter_rows(self):
+        """Yield (primary, secondaries, counts) for every nonempty row, the
+        same shape ``PairSink.emit_row`` receives (and ``write_segment``
+        consumes — segments merge with each other and with spill runs)."""
+        ptr = self._arr("row_ptr")
+        cols, counts = self._arr("cols"), self._arr("counts")
+        for t in range(self.vocab_size):
+            lo, hi = int(ptr[t]), int(ptr[t + 1])
+            if hi > lo:
+                yield t, np.asarray(cols[lo:hi]), np.asarray(counts[lo:hi])
+
+    def to_pair_file(self, path: str) -> None:
+        """Write the paper's binary pair format (FileSink round-trip)."""
+        sink = FileSink(path)
+        for primary, secs, cnts in self.iter_rows():
+            if int(cnts.max()) >= 1 << 32:
+                # FileSink stores u32 counts; refuse to corrupt the export
+                raise OverflowError(
+                    f"row {primary} holds a count >= 2^32; the paper's pair "
+                    "format cannot represent it"
+                )
+            sink.emit_row(primary, secs, cnts)
+        sink.close()
+
+    def emit_to(self, sink: PairSink) -> None:
+        for primary, secs, cnts in self.iter_rows():
+            sink.emit_row(primary, secs, cnts)
+
+    def dense(self) -> np.ndarray:
+        """Dense strict-upper matrix (tests / small vocab only)."""
+        mat = np.zeros((self.vocab_size, self.vocab_size), dtype=np.int64)
+        for primary, secs, cnts in self.iter_rows():
+            mat[primary, secs.astype(np.int64)] = cnts
+        return mat
+
+
+def segment_from_pair_file(
+    pair_path: str,
+    out_dir: str,
+    vocab_size: int,
+    *,
+    df: np.ndarray | None = None,
+    num_docs: int = 0,
+) -> CSRSegment:
+    """Convert a paper-format pair file (any row order, repeated primaries
+    allowed) into a CSR segment, by routing it through the spill builder."""
+    from repro.store.builder import SpillSink
+
+    sink = SpillSink(vocab_size)
+    try:
+        for primary, secs, cnts in read_pair_file(pair_path):
+            sink.emit_row(primary, secs.astype(np.int64), cnts.astype(np.int64))
+        write_segment(
+            out_dir,
+            sink.merged_rows(),
+            vocab_size,
+            df=df,
+            num_docs=num_docs,
+            source=f"pair_file:{os.path.basename(pair_path)}",
+        )
+    finally:
+        sink.close()
+    return CSRSegment(out_dir)

@@ -1,0 +1,146 @@
+"""Batched query engine over a co-occurrence store.
+
+Serving-side counterpart of the counting pipeline: pair-count point lookups,
+and top-k neighbour queries scored by raw count, PMI, or Dice. Neighbour
+rows are gathered from the mmap'd segments through a small LRU cache, padded
+into a rectangular batch, and scored/top-k'd in one JAX-jitted call — the
+same batched-gather discipline as the LM serving path (launch/serve.py),
+applied to retrieval statistics.
+
+Scores (df = document frequency, D = total documents):
+    count  c(t, n)                        — exact integer top-k
+    pmi    log(c · D / (df_t · df_n))    — pointwise mutual information
+    dice   2c / (df_t + df_n)            — Dice coefficient
+"""
+
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.store.segments import Store
+
+SCORES = ("count", "pmi", "dice")
+
+
+@functools.partial(jax.jit, static_argnames=("score", "k"))
+def _score_topk(ids, cnts, df_t, df_n, num_docs, *, score: str, k: int):
+    """ids, cnts: (B, L) padded with id=-1 / cnt=0; df_t: (B,); df_n: (B, L).
+
+    Returns (top_ids (B, k), top_scores (B, k)); padding slots score -inf
+    (count: 0) and surface id -1."""
+    valid = ids >= 0
+    if score == "count":
+        # integer path — exact, no float rounding in the ranking. int32 is
+        # the widest integer top_k gets without x64; a pair count is bounded
+        # by the store's document count, so this is exact below 2³¹ docs
+        s = jnp.where(valid, cnts, 0).astype(jnp.int32)
+    elif score == "pmi":
+        s = jnp.log(
+            cnts.astype(jnp.float32)
+            * jnp.float32(num_docs)
+            / (df_t[:, None].astype(jnp.float32) * df_n.astype(jnp.float32))
+        )
+        s = jnp.where(valid, s, -jnp.inf)
+    elif score == "dice":
+        s = (
+            2.0
+            * cnts.astype(jnp.float32)
+            / (df_t[:, None] + df_n).astype(jnp.float32)
+        )
+        s = jnp.where(valid, s, -jnp.inf)
+    else:
+        raise ValueError(f"unknown score {score!r}; have {SCORES}")
+    top_s, top_idx = jax.lax.top_k(s, k)
+    top_ids = jnp.take_along_axis(ids, top_idx, axis=1)
+    return top_ids, top_s
+
+
+class QueryEngine:
+    """Batched queries against a ``Store`` with an LRU row cache."""
+
+    def __init__(self, store: Store, *, cache_rows: int = 4096):
+        self.store = store
+        self.cache_rows = cache_rows
+        self._cache: OrderedDict[int, tuple[np.ndarray, np.ndarray]] = OrderedDict()
+        self._df = store.df()
+        self._num_docs = max(store.num_docs, 1)
+        self._store_version = store.version
+        self.stats = {"cache_hits": 0, "cache_misses": 0}
+
+    # ----------------------------------------------------------- cache
+    def _maybe_invalidate(self) -> None:
+        if self.store.version != self._store_version:
+            self._cache.clear()
+            self._df = self.store.df()
+            self._num_docs = max(self.store.num_docs, 1)
+            self._store_version = self.store.version
+
+    def neighbours(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        """Merged (neighbour_ids, counts) of ``t``, LRU-cached."""
+        self._maybe_invalidate()
+        hit = self._cache.get(t)
+        if hit is not None:
+            self._cache.move_to_end(t)
+            self.stats["cache_hits"] += 1
+            return hit
+        self.stats["cache_misses"] += 1
+        ids, cnts = self.store.neighbours(t)
+        row = (np.asarray(ids, dtype=np.int64), np.asarray(cnts, dtype=np.int64))
+        self._cache[t] = row
+        if len(self._cache) > self.cache_rows:
+            self._cache.popitem(last=False)
+        return row
+
+    # --------------------------------------------------------- queries
+    def pair_counts(self, pairs: np.ndarray) -> np.ndarray:
+        """Exact counts for a (B, 2) batch of unordered term pairs."""
+        return self.store.pair_counts(pairs)
+
+    def topk(
+        self, terms, k: int = 10, *, score: str = "count"
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Top-k neighbours for a batch of terms.
+
+        Returns (ids (B, k), scores (B, k)); rows with fewer than k
+        neighbours are padded with id -1 (score 0 for count, -inf else).
+        """
+        if score not in SCORES:
+            raise ValueError(f"unknown score {score!r}; have {SCORES}")
+        terms = np.atleast_1d(np.asarray(terms, dtype=np.int64))
+        rows = [self.neighbours(int(t)) for t in terms]
+        L = max((len(r[0]) for r in rows), default=0)
+        # jit cache friendliness: round the pad length up to a power of two
+        L = max(8, 1 << (L - 1).bit_length()) if L else 8
+        B = len(terms)
+        ids = np.full((B, L), -1, dtype=np.int64)
+        cnts = np.zeros((B, L), dtype=np.int64)
+        for b, (rids, rcnts) in enumerate(rows):
+            ids[b, : len(rids)] = rids
+            cnts[b, : len(rids)] = rcnts
+        # clamp BOTH df sides to >=1: stores built without df metadata
+        # (write_segment df=None) would otherwise divide by zero and tie
+        # every pmi candidate at +inf
+        df_n = np.where(ids >= 0, np.maximum(self._df[np.maximum(ids, 0)], 1), 1)
+        df_t = np.maximum(self._df[terms], 1)
+        top_ids, top_s = _score_topk(
+            jnp.asarray(ids),
+            jnp.asarray(cnts),
+            jnp.asarray(df_t),
+            jnp.asarray(df_n),
+            self._num_docs,
+            score=score,
+            k=min(k, L),
+        )
+        top_ids = np.asarray(top_ids)
+        top_s = np.asarray(top_s)
+        if k > top_ids.shape[1]:  # fewer candidates than k: pad out
+            pad = k - top_ids.shape[1]
+            top_ids = np.pad(top_ids, ((0, 0), (0, pad)), constant_values=-1)
+            fill = 0 if score == "count" else -np.inf
+            top_s = np.pad(top_s, ((0, 0), (0, pad)), constant_values=fill)
+        return top_ids, top_s

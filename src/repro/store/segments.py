@@ -1,0 +1,227 @@
+"""LSM-style co-occurrence store: a manifest of immutable CSR segments.
+
+A store directory holds ``store.json`` plus one subdirectory per segment:
+
+    store.json       {vocab_size, segments: [...], next_seg_id}
+    seg-00000/       immutable CSR segment (csr_store.py layout)
+    seg-00001/
+    ...
+
+Counts are additive across document batches (C = Σ_s B_sᵀ B_s), so the
+store supports **exact incremental appends**: counting a new document batch
+produces a new segment; queries sum counts across segments; ``compact()``
+k-way-merges all segments back into one with no loss of exactness. The same
+merge path ingests per-shard outputs of the distributed runner, following
+the inverted-index-based real-time construction of Cheng (2023).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import numpy as np
+
+from repro.store.builder import SpillSink, merge_row_streams, sum_by_key
+from repro.store.csr_store import CSRSegment, write_segment
+
+STORE_META = "store.json"
+
+
+class Store:
+    """A directory of CSR segments behind a JSON manifest."""
+
+    def __init__(self, path: str, manifest: dict):
+        self.path = path
+        self.manifest = manifest
+        self._segments: dict[str, CSRSegment] = {}
+        # bumped on every manifest mutation; query engines use it to know
+        # when their row caches are stale
+        self.version = 0
+
+    # ------------------------------------------------------- lifecycle
+    @classmethod
+    def create(cls, path: str, vocab_size: int) -> "Store":
+        if os.path.exists(os.path.join(path, STORE_META)):
+            raise FileExistsError(f"store already exists at {path}")
+        os.makedirs(path, exist_ok=True)
+        store = cls(
+            path, {"vocab_size": vocab_size, "segments": [], "next_seg_id": 0}
+        )
+        store._save()
+        return store
+
+    @classmethod
+    def open(cls, path: str) -> "Store":
+        with open(os.path.join(path, STORE_META)) as f:
+            return cls(path, json.load(f))
+
+    @staticmethod
+    def exists(path: str) -> bool:
+        return os.path.exists(os.path.join(path, STORE_META))
+
+    def _save(self) -> None:
+        tmp = os.path.join(self.path, STORE_META + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(self.manifest, f, indent=2)
+        os.replace(tmp, os.path.join(self.path, STORE_META))
+        self.version += 1
+
+    # ------------------------------------------------------- properties
+    @property
+    def vocab_size(self) -> int:
+        return self.manifest["vocab_size"]
+
+    @property
+    def segment_names(self) -> list[str]:
+        return list(self.manifest["segments"])
+
+    @property
+    def segments(self) -> list[CSRSegment]:
+        return [self._segment(n) for n in self.manifest["segments"]]
+
+    def _segment(self, name: str) -> CSRSegment:
+        if name not in self._segments:
+            self._segments[name] = CSRSegment(os.path.join(self.path, name))
+        return self._segments[name]
+
+    @property
+    def num_docs(self) -> int:
+        return sum(s.num_docs for s in self.segments)
+
+    @property
+    def total_count(self) -> int:
+        return sum(s.total_count for s in self.segments)
+
+    def df(self) -> np.ndarray:
+        """Document frequencies summed across segments (additive like the
+        counts themselves)."""
+        out = np.zeros(self.vocab_size, dtype=np.int64)
+        for s in self.segments:
+            out += s.df
+        return out
+
+    # --------------------------------------------------------- writing
+    def _new_segment_dir(self) -> tuple[str, str]:
+        name = f"seg-{self.manifest['next_seg_id']:05d}"
+        self.manifest["next_seg_id"] += 1
+        return name, os.path.join(self.path, name)
+
+    def add_segment_from_sink(
+        self,
+        sink: SpillSink,
+        *,
+        df: np.ndarray | None = None,
+        num_docs: int = 0,
+        source: str = "spill",
+    ) -> CSRSegment:
+        """Finalize a SpillSink's runs into a new segment of this store."""
+        if sink.vocab_size != self.vocab_size:
+            raise ValueError(
+                f"sink vocab {sink.vocab_size} != store vocab {self.vocab_size}"
+            )
+        name, seg_dir = self._new_segment_dir()
+        seg = sink.finalize_segment(seg_dir, df=df, num_docs=num_docs, source=source)
+        self.manifest["segments"].append(name)
+        self._save()
+        return seg
+
+    def append_collection(
+        self,
+        c,
+        *,
+        method: str = "list-scan",
+        memory_budget_pairs: int = 4 << 20,
+        **kwargs,
+    ) -> CSRSegment:
+        """Count a new document batch and append it as a segment (the exact
+        incremental path: no existing segment is touched)."""
+        from repro.core.cooc import count  # lazy: core wires back into us
+
+        sink = SpillSink(
+            self.vocab_size, memory_budget_pairs=memory_budget_pairs
+        )
+        try:
+            count(method, c, sink, **kwargs)
+            df = np.bincount(c.terms, minlength=self.vocab_size).astype(np.int64)
+            return self.add_segment_from_sink(
+                sink, df=df, num_docs=c.num_docs, source=f"count:{method}"
+            )
+        finally:
+            sink.close()
+
+    def ingest_store(self, other: "Store") -> CSRSegment:
+        """Merge another store's segments (e.g. a per-shard store from the
+        distributed runner) into one new segment here. Exact: counts add."""
+        if other.vocab_size != self.vocab_size:
+            raise ValueError("vocab mismatch")
+        segs = other.segments
+        name, seg_dir = self._new_segment_dir()
+        df = other.df()
+        write_segment(
+            seg_dir,
+            merge_row_streams([s.iter_rows() for s in segs]),
+            self.vocab_size,
+            df=df,
+            num_docs=other.num_docs,
+            source=f"ingest:{os.path.basename(other.path)}",
+        )
+        self.manifest["segments"].append(name)
+        self._save()
+        return self._segment(name)
+
+    def compact(self) -> CSRSegment:
+        """Merge all segments into one (LSM major compaction). Queries before
+        and after return identical counts."""
+        old_names = self.segment_names
+        old_segs = [self._segment(n) for n in old_names]
+        df = self.df()
+        num_docs = self.num_docs
+        name, seg_dir = self._new_segment_dir()
+        write_segment(
+            seg_dir,
+            merge_row_streams([s.iter_rows() for s in old_segs]),
+            self.vocab_size,
+            df=df,
+            num_docs=num_docs,
+            source=f"compact:{len(old_names)}",
+        )
+        self.manifest["segments"] = [name]
+        self._save()
+        for n in old_names:
+            self._segments.pop(n, None)
+            shutil.rmtree(os.path.join(self.path, n), ignore_errors=True)
+        return self._segment(name)
+
+    # --------------------------------------------------------- queries
+    # (thin exact primitives; the batched/scored engine lives in query.py)
+    def pair_count(self, i: int, j: int) -> int:
+        return sum(s.pair_count(i, j) for s in self.segments)
+
+    def pair_counts(self, pairs: np.ndarray) -> np.ndarray:
+        pairs = np.asarray(pairs, dtype=np.int64)
+        out = np.zeros(len(pairs), dtype=np.int64)
+        for s in self.segments:
+            out += s.pair_counts(pairs)
+        return out
+
+    def neighbours(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        """Merged symmetric neighbourhood of ``t`` across segments."""
+        segs = self.segments
+        if len(segs) == 1:
+            ids, cnts = segs[0].neighbours(t)
+            return np.asarray(ids, dtype=np.int64), np.asarray(cnts)
+        parts = [s.neighbours(t) for s in segs]
+        ids = np.concatenate([p[0] for p in parts]).astype(np.int64)
+        cnts = np.concatenate([p[1] for p in parts]).astype(np.int64)
+        if len(ids) == 0:
+            return ids, cnts
+        return sum_by_key(ids, cnts)
+
+    def dense(self) -> np.ndarray:
+        """Dense strict-upper matrix summed over segments (tests only)."""
+        mat = np.zeros((self.vocab_size, self.vocab_size), dtype=np.int64)
+        for s in self.segments:
+            mat += s.dense()
+        return mat

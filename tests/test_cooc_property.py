@@ -5,6 +5,9 @@ preprocessing path (dedup + sort, paper §2) is exercised too.
 """
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cooc import dense_counts

@@ -24,6 +24,7 @@ SMALL_MESH_SCRIPT = textwrap.dedent(
     from repro.runtime.sharding import lm_param_specs
     from repro.launch.specs import _attach, _sds
 
+    from repro.runtime.sharding import set_mesh_compat as set_mesh
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     for arch in ["olmoe-1b-7b", "minicpm3-4b"]:
         cfg = dataclasses.replace(get_spec(arch).smoke(), remat=True)
@@ -36,7 +37,7 @@ SMALL_MESH_SCRIPT = textwrap.dedent(
                          opt_state_specs(opt_name, specs, shapes_tree), mesh)
         tokens = _sds((8, 32), jnp.int32, mesh, P(("data",), None))
         step = make_lm_train_step(cfg, opt)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             compiled = jax.jit(step, donate_argnums=0).lower(
                 (params_sds, ostate), {"tokens": tokens}
             ).compile()

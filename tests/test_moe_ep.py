@@ -23,22 +23,30 @@ SCRIPT = textwrap.dedent(
     y_ref, aux_ref = moe_ffn(params, x, n_experts=E, top_k=k,
                              capacity_factor=float(E), expert_kind="swiglu")
 
+    from repro.runtime.sharding import set_mesh_compat as set_mesh
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     fn = lambda p, xx: moe_ffn_ep(p, xx, n_experts=E, top_k=k,
                                   capacity_factor=float(E), expert_kind="swiglu")
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y_ep, aux_ep = jax.jit(fn)(params, x)
     np.testing.assert_allclose(np.asarray(y_ep), np.asarray(y_ref), atol=2e-5, rtol=2e-5)
     # aux is averaged PER DATA SHARD in the EP path (standard Switch/GShard
     # practice) vs global-batch in the reference → small semantic difference
     np.testing.assert_allclose(float(aux_ep), float(aux_ref), rtol=0.15)
 
-    # gradients must also agree (shard_map psum transpose correctness)
-    loss_ref = lambda p: jnp.sum(moe_ffn(p, x, n_experts=E, top_k=k,
-                                 capacity_factor=float(E), expert_kind="swiglu")[0] ** 2)
-    loss_ep = lambda p: jnp.sum(fn(p, x)[0] ** 2)
+    # gradients must also agree (shard_map psum transpose correctness).
+    # Both losses touch aux with coefficient 0 so its cotangent is an
+    # instantiated zero — old shard_map releases reject symbolic Zero
+    # cotangents in transpose; the gradients are unchanged.
+    def loss_ref(p):
+        y, aux = moe_ffn(p, x, n_experts=E, top_k=k,
+                         capacity_factor=float(E), expert_kind="swiglu")
+        return jnp.sum(y ** 2) + 0.0 * aux
+    def loss_ep(p):
+        y, aux = fn(p, x)
+        return jnp.sum(y ** 2) + 0.0 * aux
     g_ref = jax.grad(loss_ref)(params)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         g_ep = jax.jit(jax.grad(loss_ep))(params)
     jax.tree.map(
         lambda a, b: np.testing.assert_allclose(
@@ -48,7 +56,7 @@ SCRIPT = textwrap.dedent(
     )
     # B=1 (replicated-batch) path: decode shapes with batch < mesh extent
     x1 = x[:1]
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         y1, _ = jax.jit(fn)(params, x1)
     y1_ref, _ = moe_ffn(params, x1, n_experts=E, top_k=k,
                         capacity_factor=float(E), expert_kind="swiglu")

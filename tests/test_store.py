@@ -1,0 +1,269 @@
+"""Store subsystem: spill-and-merge build, CSR segments, incremental
+append, shard ingest, and query exactness — everything checked against the
+naive / brute-force dense oracle (integer equality, no allclose)."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cooc import count, count_to_store, dense_counts
+from repro.core.oracle import brute_force_counts
+from repro.core.types import DenseSink, FileSink, read_pair_file
+from repro.data.corpus import synthetic_zipf_collection
+from repro.data.preprocess import shard_documents
+from repro.store import (
+    CSRSegment,
+    QueryEngine,
+    SpillSink,
+    Store,
+    segment_from_pair_file,
+)
+
+
+@pytest.fixture(scope="module")
+def coll():
+    return synthetic_zipf_collection(120, vocab=200, mean_len=15, seed=11)
+
+
+@pytest.fixture(scope="module")
+def oracle(coll):
+    return brute_force_counts(coll)
+
+
+# ------------------------------------------------------------------ builder
+@pytest.mark.parametrize("method", ["naive", "list-scan", "list-blocks"])
+@pytest.mark.parametrize("budget", [64, 4096, 1 << 22])
+def test_spill_sink_matches_dense(coll, oracle, method, budget, tmp_path):
+    """Any counting method through a SpillSink (any budget, incl. ones that
+    force many spills) equals the dense accumulation."""
+    sink = SpillSink(coll.vocab_size, memory_budget_pairs=budget)
+    count(method, coll, sink)
+    if budget == 64:
+        assert sink.stats["spills"] > 1
+    seg = sink.finalize_segment(str(tmp_path / "seg"))
+    assert np.array_equal(seg.dense(), oracle)
+    assert seg.nnz == int((oracle > 0).sum())
+    assert seg.total_count == int(oracle.sum())
+
+
+def test_spill_sink_emit_col(coll, oracle, tmp_path):
+    """freq-split's column-order tail path spills correctly too."""
+    from repro.data.preprocess import remap_df_descending
+
+    cd, _ = remap_df_descending(coll)
+    sink = SpillSink(cd.vocab_size, memory_budget_pairs=128)
+    count("freq-split", cd, sink, head=32, use_kernel=False)
+    seg = sink.finalize_segment(str(tmp_path / "seg"))
+    assert np.array_equal(seg.dense(), brute_force_counts(cd))
+
+
+# ------------------------------------------------------------- CSR segment
+def test_segment_lookups(coll, oracle, tmp_path):
+    sink = SpillSink(coll.vocab_size, memory_budget_pairs=256)
+    count("list-scan", coll, sink)
+    seg = sink.finalize_segment(str(tmp_path / "seg"))
+
+    sym = oracle + oracle.T
+    rng = np.random.default_rng(0)
+    for t in [0, 7, coll.vocab_size - 1]:
+        secs, cnts = seg.row(t)
+        nz = np.nonzero(oracle[t])[0]
+        assert np.array_equal(secs, nz)
+        assert np.array_equal(cnts, oracle[t][nz])
+        ids, ncnts = seg.neighbours(t)
+        nz = np.nonzero(sym[t])[0]
+        assert np.array_equal(ids, nz)
+        assert np.array_equal(ncnts, sym[t][nz])
+
+    pairs = rng.integers(0, coll.vocab_size, size=(300, 2))
+    lo, hi = np.minimum(pairs[:, 0], pairs[:, 1]), np.maximum(pairs[:, 0], pairs[:, 1])
+    want = np.where(lo == hi, 0, oracle[lo, hi])
+    assert np.array_equal(seg.pair_counts(pairs), want)
+    assert seg.pair_count(5, 5) == 0
+    # reopen from disk (a serving process)
+    seg2 = CSRSegment(seg.path)
+    assert np.array_equal(seg2.dense(), oracle)
+
+
+def test_pair_file_roundtrip(coll, oracle, tmp_path):
+    """FileSink output -> SpillSink runs -> merged CSR store -> back to the
+    paper's pair format; counts match the naive oracle end to end."""
+    pf = str(tmp_path / "pairs.bin")
+    sink = FileSink(pf)
+    count("list-scan", coll, sink)
+    sink.close()
+
+    seg = segment_from_pair_file(pf, str(tmp_path / "seg"), coll.vocab_size)
+    assert np.array_equal(seg.dense(), dense_counts("naive", coll))
+
+    pf2 = str(tmp_path / "pairs2.bin")
+    seg.to_pair_file(pf2)
+    mat = np.zeros_like(oracle)
+    for p, secs, cnts in read_pair_file(pf2):
+        mat[p, secs.astype(np.int64)] += cnts.astype(np.int64)
+    assert np.array_equal(mat, oracle)
+
+
+def test_segment_emit_to_dense_sink(coll, oracle, tmp_path):
+    sink = SpillSink(coll.vocab_size)
+    count("list-scan", coll, sink)
+    seg = sink.finalize_segment(str(tmp_path / "seg"))
+    dense = DenseSink(coll.vocab_size)
+    seg.emit_to(dense)
+    assert np.array_equal(dense.mat, oracle)
+
+
+def test_empty_collection(tmp_path):
+    from repro.data.preprocess import preprocess_documents
+
+    c = preprocess_documents([[1], []], vocab_size=8)  # no pairs at all
+    sink = SpillSink(c.vocab_size)
+    count("list-scan", c, sink)
+    seg = sink.finalize_segment(str(tmp_path / "seg"))
+    assert seg.nnz == 0
+    assert seg.pair_count(0, 1) == 0
+    ids, cnts = seg.neighbours(1)
+    assert len(ids) == 0 and len(cnts) == 0
+
+
+# ------------------------------------------------------- store / manifest
+def test_incremental_append_exact(coll, oracle, tmp_path):
+    store = Store.create(str(tmp_path / "store"), coll.vocab_size)
+    for shard in shard_documents(coll, 3):
+        store.append_collection(shard, method="naive", memory_budget_pairs=128)
+    assert len(store.segment_names) == 3
+    assert np.array_equal(store.dense(), oracle)
+    assert store.num_docs == coll.num_docs
+    assert np.array_equal(
+        store.df(), np.bincount(coll.terms, minlength=coll.vocab_size)
+    )
+
+
+def test_compaction_preserves_counts(coll, oracle, tmp_path):
+    store = Store.create(str(tmp_path / "store"), coll.vocab_size)
+    for shard in shard_documents(coll, 4):
+        store.append_collection(shard, method="list-scan", memory_budget_pairs=256)
+    df, nd = store.df().copy(), store.num_docs
+    old_dirs = [os.path.join(store.path, n) for n in store.segment_names]
+    store.compact()
+    assert len(store.segment_names) == 1
+    assert np.array_equal(store.dense(), oracle)
+    assert np.array_equal(store.df(), df) and store.num_docs == nd
+    assert not any(os.path.exists(p) for p in old_dirs)  # GC'd
+
+
+def test_multi_shard_ingest(coll, oracle, tmp_path):
+    """Per-shard stores (the distributed runner's per-worker outputs) merge
+    exactly into one serving store."""
+    dest = Store.create(str(tmp_path / "dest"), coll.vocab_size)
+    for i, shard in enumerate(shard_documents(coll, 2)):
+        shard_store = Store.create(str(tmp_path / f"shard{i}"), coll.vocab_size)
+        shard_store.append_collection(shard, method="list-blocks")
+        dest.ingest_store(shard_store)
+    assert np.array_equal(dest.dense(), oracle)
+    assert dest.num_docs == coll.num_docs
+
+
+def test_store_reopen(coll, oracle, tmp_path):
+    path = str(tmp_path / "store")
+    store = Store.create(path, coll.vocab_size)
+    store.append_collection(coll, method="list-scan")
+    del store
+    store = Store.open(path)
+    assert np.array_equal(store.dense(), oracle)
+
+
+def test_count_to_store_create_then_append(coll, tmp_path):
+    path = str(tmp_path / "store")
+    half = shard_documents(coll, 2)
+    store, _ = count_to_store("list-scan", half[0], path, memory_budget_pairs=512)
+    store2, _ = count_to_store("list-scan", half[1], path, memory_budget_pairs=512)
+    assert len(store2.segment_names) == 2
+    assert np.array_equal(store2.dense(), brute_force_counts(coll))
+
+
+# ------------------------------------------------------------ query engine
+def test_query_engine_pair_counts(coll, oracle, tmp_path):
+    store, _ = count_to_store("list-scan", coll, str(tmp_path / "s"))
+    eng = QueryEngine(store)
+    rng = np.random.default_rng(2)
+    pairs = rng.integers(0, coll.vocab_size, size=(400, 2))
+    lo, hi = np.minimum(pairs[:, 0], pairs[:, 1]), np.maximum(pairs[:, 0], pairs[:, 1])
+    want = np.where(lo == hi, 0, oracle[lo, hi])
+    assert np.array_equal(eng.pair_counts(pairs), want)
+
+
+def test_query_engine_topk_count_exact(coll, oracle, tmp_path):
+    store, _ = count_to_store("list-scan", coll, str(tmp_path / "s"))
+    eng = QueryEngine(store)
+    sym = oracle + oracle.T
+    terms = np.arange(0, coll.vocab_size, 7)
+    k = 6
+    ids, scores = eng.topk(terms, k=k, score="count")
+    assert ids.shape == (len(terms), k)
+    for b, t in enumerate(terms):
+        want = np.sort(sym[t])[::-1][:k]
+        got = np.where(ids[b] >= 0, scores[b], 0).astype(np.int64)
+        assert np.array_equal(np.sort(got)[::-1], want)
+        for i, s in zip(ids[b], scores[b]):
+            if i >= 0:
+                assert sym[t][i] == s
+
+
+@pytest.mark.parametrize("score", ["pmi", "dice"])
+def test_query_engine_topk_scored(coll, oracle, tmp_path, score):
+    store, _ = count_to_store("list-scan", coll, str(tmp_path / "s"))
+    eng = QueryEngine(store)
+    sym = (oracle + oracle.T).astype(np.float64)
+    df = np.bincount(coll.terms, minlength=coll.vocab_size).astype(np.float64)
+    D = coll.num_docs
+    terms = np.array([0, 3, 11, 42])
+    k = 5
+    ids, scores = eng.topk(terms, k=k, score=score)
+    for b, t in enumerate(terms):
+        with np.errstate(divide="ignore", invalid="ignore"):
+            if score == "pmi":
+                ref = np.log(sym[t] * D / (df[t] * df))
+            else:
+                ref = 2.0 * sym[t] / (df[t] + df)
+        ref[sym[t] == 0] = -np.inf
+        want = np.sort(ref)[::-1][:k]
+        got = np.sort(np.asarray(scores[b], dtype=np.float64))[::-1]
+        finite = np.isfinite(want)
+        assert np.allclose(got[finite], want[finite], rtol=1e-5)
+        for i, s in zip(ids[b], scores[b]):
+            if i >= 0 and np.isfinite(s):
+                assert np.isclose(float(s), ref[i], rtol=1e-5)
+
+
+def test_query_engine_k_exceeds_degree(coll, tmp_path):
+    store, _ = count_to_store("list-scan", coll, str(tmp_path / "s"))
+    eng = QueryEngine(store)
+    ids, scores = eng.topk([0], k=10 * coll.vocab_size, score="count")
+    assert ids.shape[1] == 10 * coll.vocab_size
+    assert (ids[0] == -1).any()  # padded out past the true degree
+
+
+def test_query_engine_cache_and_invalidation(coll, tmp_path):
+    store, _ = count_to_store("list-scan", coll, str(tmp_path / "s"))
+    eng = QueryEngine(store, cache_rows=4)
+    eng.topk([1, 2, 1, 2], k=3)
+    assert eng.stats["cache_hits"] >= 2
+    before = eng.pair_counts(np.array([[1, 2]]))[0]
+    # append the same docs again: every count doubles, engine must notice
+    store.append_collection(coll, method="list-scan")
+    after = eng.pair_counts(np.array([[1, 2]]))[0]
+    assert after == 2 * before
+    ids, scores = eng.topk([1], k=3)
+    sym = 2 * (brute_force_counts(coll) + brute_force_counts(coll).T)
+    assert scores[0][0] == np.sort(sym[1])[::-1][0]
+
+
+# ------------------------------------------------------------------ serving
+def test_cooc_serve_driver_smoke():
+    from repro.launch.cooc_serve import serve
+
+    stats = serve(docs=200, vocab=256, queries=64, batch=16, topk=5)
+    assert stats["topk_qps"] > 0 and stats["pair_qps"] > 0
+    assert stats["num_docs"] == 200
