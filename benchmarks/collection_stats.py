@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import row, time_call
+from benchmarks.common import bench_kwargs, row, time_call
 from repro.core.cooc import count
 from repro.core.types import StatsSink
 from repro.data.corpus import collection_stats, synthetic_zipf_collection
@@ -35,7 +35,7 @@ def run() -> list[str]:
         cd, _ = remap_df_descending(c)
         sink = StatsSink()
         _, secs = time_call(
-            lambda: count("freq-split", cd, sink, head=512, use_kernel=False)
+            lambda: count("freq-split", cd, sink, **bench_kwargs("freq-split"))
         )
         derived = (
             f"docs={s['num_docs']};avg_len={s['avg_doc_len']:.1f};"

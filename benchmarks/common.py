@@ -1,8 +1,46 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities — including the single source of truth for
+per-method benchmark kwargs and document-count caps, derived from the
+``MethodSpec`` registry (core/specs.py). The per-file ``METHOD_KWARGS`` /
+``MAX_SCALE`` copies that used to live in methods_time / methods_memory /
+scaling / throughput are gone."""
 
 from __future__ import annotations
 
 import time
+
+from repro.core.specs import REGISTRY
+
+# the paper's five exact methods, in presentation order
+PAPER_METHODS = [n for n, s in REGISTRY.items() if s.kind == "paper"]
+# Figure-1 sweep: paper methods + the CPU-feasible TPU adaptations + hybrid
+FIG1_METHODS = PAPER_METHODS + ["list-scan-segment", "multi-scan-matmul", "freq-split"]
+# Figure-2 (memory) sweep: paper methods + hybrid (subprocess tracemalloc)
+MEMORY_METHODS = PAPER_METHODS + ["freq-split"]
+# §1/§4 throughput headline: the asymptotic winners + hybrid
+THROUGHPUT_METHODS = ["list-scan", "list-blocks", "freq-split"]
+
+
+def bench_kwargs(method: str) -> dict:
+    """Benchmark kwargs for ``method``: MethodSpec defaults merged with the
+    spec's benchmark overrides (e.g. ``use_kernel=False`` on CPU paths)."""
+    spec = REGISTRY[method]
+    kw = spec.resolve_kwargs(spec.bench_overrides)
+    return {k: v for k, v in kw.items() if v is not None}
+
+
+def bench_max_docs(method: str, suite: str | None = None) -> int:
+    """Document-count cap beyond which ``method`` is too slow to benchmark
+    (the paper also stopped NAÏVE and LIST-PAIRS/MULTI-SCAN early). A suite
+    name ("fig1" | "fig2" | "scaling") applies the spec's per-suite
+    exceptions — e.g. the subprocess memory figure tolerates LIST-PAIRS at
+    scales the timing figure can't."""
+    spec = REGISTRY[method]
+    cap = spec.bench_caps.get(suite, spec.bench_max_docs) if suite else spec.bench_max_docs
+    return cap if cap is not None else 10**9
+
+
+def needs_df_descending(method: str) -> bool:
+    return REGISTRY[method].needs_df_descending
 
 
 def time_call(fn, *args, repeats: int = 1, **kwargs):

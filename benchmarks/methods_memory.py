@@ -4,7 +4,10 @@ Each method runs in a fresh subprocess; tracemalloc peak (tracks numpy
 buffers and the NAÏVE pair dictionary) is the measure — the analogue of the
 paper's Figure-2 process counters, minus the interpreter/jax import floor.
 Reproduces the ordering: NAÏVE most memory-hungry (pair dictionary),
-scan/block methods bounded by the collection + one accumulator strip."""
+scan/block methods bounded by the collection + one accumulator strip.
+
+Per-method kwargs and scale caps come from the MethodSpec registry via
+benchmarks/common.py (the child process imports it too)."""
 
 from __future__ import annotations
 
@@ -13,7 +16,7 @@ import subprocess
 import sys
 import textwrap
 
-from benchmarks.common import row
+from benchmarks.common import MEMORY_METHODS, bench_max_docs, row
 
 SCALES = (300, 1000)
 VOCAB = 30_000
@@ -22,6 +25,8 @@ _CHILD = textwrap.dedent(
     """
     import json, resource, sys, tracemalloc
     sys.path.insert(0, "src")
+    sys.path.insert(0, ".")
+    from benchmarks.common import bench_kwargs, needs_df_descending
     from repro.core.cooc import count
     from repro.core.types import StatsSink
     from repro.data.corpus import synthetic_zipf_collection
@@ -29,10 +34,9 @@ _CHILD = textwrap.dedent(
 
     method, n = sys.argv[1], int(sys.argv[2])
     c = synthetic_zipf_collection(n, vocab={vocab}, mean_len=60, seed=1)
-    if method == "freq-split":
+    if needs_df_descending(method):
         c, _ = remap_df_descending(c)
-    kwargs = dict(flush_pairs=2_000_000) if method == "naive" else (
-        dict(head=512, use_kernel=False) if method == "freq-split" else {{}})
+    kwargs = bench_kwargs(method)
     tracemalloc.start()
     count(method, c, StatsSink(), **kwargs)
     cur, peak = tracemalloc.get_traced_memory()
@@ -41,15 +45,12 @@ _CHILD = textwrap.dedent(
     """
 ).format(vocab=VOCAB)
 
-METHODS = ["naive", "list-pairs", "list-blocks", "list-scan", "multi-scan", "freq-split"]
-MAX_SCALE = {"naive": 300, "list-pairs": 300}
-
 
 def run() -> list[str]:
     rows = []
     for n in SCALES:
-        for method in METHODS:
-            if n > MAX_SCALE.get(method, 10**9):
+        for method in MEMORY_METHODS:
+            if n > bench_max_docs(method, "fig2"):
                 continue
             res = subprocess.run(
                 [sys.executable, "-c", _CHILD, method, str(n)],

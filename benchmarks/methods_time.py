@@ -1,13 +1,21 @@
 """Paper Figure 1: time comparison of co-occurrence count methods vs
 collection size. Reproduces the paper's ranking:
 NAÏVE ≫ LIST-PAIRS ≈ MULTI-SCAN ≫ LIST-BLOCKS ≈ LIST-SCAN,
-plus the TPU adaptations and the beyond-paper FREQ-SPLIT hybrid."""
+plus the TPU adaptations and the beyond-paper FREQ-SPLIT hybrid.
+
+Per-method kwargs and scale caps come from the MethodSpec registry via
+benchmarks/common.py (single source of truth)."""
 
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import row, time_call
+from benchmarks.common import (
+    FIG1_METHODS,
+    bench_kwargs,
+    bench_max_docs,
+    needs_df_descending,
+    row,
+    time_call,
+)
 from repro.core.cooc import count
 from repro.core.types import StatsSink
 from repro.data.corpus import synthetic_zipf_collection
@@ -17,20 +25,6 @@ SCALES = (100, 300, 1000)
 VOCAB = 30_000
 MEAN_LEN = 60
 
-METHOD_KWARGS = {
-    "naive": dict(flush_pairs=2_000_000),
-    "list-pairs": {},
-    "list-blocks": {},
-    "list-scan": {},
-    "multi-scan": dict(accumulators=100),
-    "list-scan-segment": dict(use_kernel=False),
-    "multi-scan-matmul": dict(use_kernel=False, accumulators=256),
-    "freq-split": dict(head=512, use_kernel=False),
-}
-# quadratic-in-vocab methods get a reduced scale set (the paper also stopped
-# NAÏVE at 10k and LIST-PAIRS/MULTI-SCAN at ~30k docs)
-MAX_SCALE = {"naive": 1000, "list-pairs": 100, "multi-scan": 300}
-
 
 def run() -> list[str]:
     rows = []
@@ -38,11 +32,12 @@ def run() -> list[str]:
     for n in SCALES:
         c = full.head(n)
         cd, _ = remap_df_descending(c)
-        for method, kwargs in METHOD_KWARGS.items():
-            if n > MAX_SCALE.get(method, 10**9):
+        for method in FIG1_METHODS:
+            if n > bench_max_docs(method, "fig1"):
                 continue
-            coll = cd if method == "freq-split" else c
+            coll = cd if needs_df_descending(method) else c
             sink = StatsSink()
+            kwargs = bench_kwargs(method)
             _, secs = time_call(lambda: count(method, coll, sink, **kwargs))
             rows.append(
                 row(

@@ -1,12 +1,21 @@
 """Paper §3 asymptotics: fit log–log time-vs-docs slopes per method and
 verify the ranking the paper observed (LIST-BLOCKS / LIST-SCAN near-linear
-and fastest; LIST-PAIRS / MULTI-SCAN super-linear; NAÏVE slowest overall)."""
+and fastest; LIST-PAIRS / MULTI-SCAN super-linear; NAÏVE slowest overall).
+
+Per-method kwargs and scale caps come from the MethodSpec registry via
+benchmarks/common.py."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import row, time_call
+from benchmarks.common import (
+    PAPER_METHODS,
+    bench_kwargs,
+    bench_max_docs,
+    row,
+    time_call,
+)
 from repro.core.cooc import count
 from repro.core.types import StatsSink
 from repro.data.corpus import synthetic_zipf_collection
@@ -14,21 +23,17 @@ from repro.data.corpus import synthetic_zipf_collection
 SCALES = (100, 200, 400, 800)
 VOCAB = 30_000
 
-METHODS = ["naive", "list-pairs", "list-blocks", "list-scan", "multi-scan"]
-MAX_SCALE = {"naive": 800, "list-pairs": 200, "multi-scan": 400}
-
 
 def run() -> list[str]:
     rows = []
     full = synthetic_zipf_collection(max(SCALES), vocab=VOCAB, mean_len=60, seed=2)
-    times: dict[str, list] = {m: [] for m in METHODS}
+    times: dict[str, list] = {m: [] for m in PAPER_METHODS}
     for n in SCALES:
         c = full.head(n)
-        for m in METHODS:
-            if n > MAX_SCALE.get(m, 10**9):
+        for m in PAPER_METHODS:
+            if n > bench_max_docs(m, "scaling"):
                 continue
-            kwargs = dict(flush_pairs=2_000_000) if m == "naive" else {}
-            _, secs = time_call(lambda: count(m, c, StatsSink(), **kwargs))
+            _, secs = time_call(lambda: count(m, c, StatsSink(), **bench_kwargs(m)))
             times[m].append((n, secs))
     for m, pts in times.items():
         if len(pts) < 2:

@@ -1,10 +1,19 @@
 """Paper §1/§4 headline: documents/hour of the best methods ("several
 hundred thousand documents per hour" for LIST-PAIRS→LIST-SCAN on 2012-era
-hardware; "perhaps a million documents per hour" projected)."""
+hardware; "perhaps a million documents per hour" projected).
+
+Method set and kwargs come from the MethodSpec registry via
+benchmarks/common.py."""
 
 from __future__ import annotations
 
-from benchmarks.common import row, time_call
+from benchmarks.common import (
+    THROUGHPUT_METHODS,
+    bench_kwargs,
+    needs_df_descending,
+    row,
+    time_call,
+)
 from repro.core.cooc import count
 from repro.core.types import StatsSink
 from repro.data.corpus import synthetic_zipf_collection
@@ -18,12 +27,10 @@ def run() -> list[str]:
     rows = []
     c = synthetic_zipf_collection(N_DOCS, vocab=VOCAB, mean_len=60, seed=3)
     cd, _ = remap_df_descending(c)
-    for method, coll, kwargs in [
-        ("list-scan", c, {}),
-        ("list-blocks", c, {}),
-        ("freq-split", cd, dict(head=512, use_kernel=False)),
-    ]:
+    for method in THROUGHPUT_METHODS:
+        coll = cd if needs_df_descending(method) else c
         sink = StatsSink()
+        kwargs = bench_kwargs(method)
         _, secs = time_call(lambda: count(method, coll, sink, **kwargs))
         rows.append(
             row(

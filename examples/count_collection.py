@@ -22,14 +22,16 @@ def main():
     result = run(
         num_docs=args.docs,
         vocab=args.vocab,
-        method="freq-split",
+        method="auto",  # the planner's cost models pick the method
         num_shards=16,
         out_dir="/tmp/cooc_e2e",
     )
     print(
-        f"\nprocessed {result['num_docs']} docs in {result['elapsed_s']}s "
+        f"\nprocessed {result['num_docs']} docs with "
+        f"{result['method']} (auto-selected) in {result['elapsed_s']}s "
         f"→ {result['docs_per_hour']:,} docs/hour "
-        f"(paper: 'several hundred thousand documents per hour')"
+        f"(paper: 'several hundred thousand documents per hour'); "
+        f"exact={result['exact']}"
     )
 
 

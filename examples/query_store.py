@@ -20,12 +20,14 @@ store_path = os.path.join(tempfile.mkdtemp(prefix="cooc_example_"), "store")
 
 # 1. Count 2000 documents into a store. The 50k-pair budget is far below the
 #    distinct-pair count, so the builder spills sorted runs and k-way-merges
-#    them into a memory-mapped CSR segment.
+#    them into a memory-mapped CSR segment. method="auto" lets the planner's
+#    cost models pick the counting method from the collection statistics.
 c = synthetic_zipf_collection(2_000, vocab=2_000, mean_len=30, seed=0)
 store, seg = count_to_store(
-    "list-scan", c, store_path, memory_budget_pairs=50_000
+    "auto", c, store_path, memory_budget_pairs=50_000
 )
-print(f"built {store_path}: {seg.nnz} distinct pairs from {c.num_docs} docs")
+print(f"built {store_path}: {seg.nnz} distinct pairs from {c.num_docs} docs "
+      f"({seg.meta['source']})")
 
 # 2. Point lookups: how often do terms 0 and 1 co-occur?
 print("pair_count(0, 1) =", store.pair_count(0, 1))

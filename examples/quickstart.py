@@ -41,6 +41,20 @@ def main():
     ppmi = ppmi_matrix(got, df, cd.num_docs)
     print(f"PPMI nonzeros: {int((ppmi > 0).sum())}")
 
+    # 5. the typed plan API: let the §3 cost models pick the method
+    from repro.core import CountJob, Planner
+
+    plan = Planner().plan(
+        CountJob(collection=cd, output="dense", method="auto", df_descending=True)
+    )
+    print(f"planner picked {plan.method!r}; ranking:")
+    for m, cost in plan.ranking:
+        print(f"   {m:12s} {cost:,.0f} work units")
+    res = plan.execute()
+    assert np.array_equal(res.counts, got)  # bit-exact vs step 3's counts
+    print(f"plan result exact={res.summary['exact']} "
+          f"({res.summary['distinct_pairs']} distinct pairs)")
+
 
 if __name__ == "__main__":
     main()

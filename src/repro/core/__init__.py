@@ -2,17 +2,40 @@
 
 Five paper-faithful methods (naive, list-pairs, list-blocks, list-scan,
 multi-scan), their TPU adaptations (MXU Gram / bit-packed popcount /
-segment-sum), the beyond-paper FREQ-SPLIT hybrid, and the distributed
-(multi-pod) Gram accumulation.
+segment-sum), the beyond-paper FREQ-SPLIT hybrid, the distributed
+(multi-pod) Gram accumulation — and the typed counting-plan API
+(``specs``/``plan``): MethodSpec registry with §3 cost models, the Planner
+(``method="auto"``), and the shared shard/merge PlanExecutor.
 """
 
-from repro.core.cooc import METHODS, count, dense_counts
+from repro.core.cooc import METHODS, count, count_to_store, dense_counts
 from repro.core.oracle import brute_force_counts
+from repro.core.plan import (
+    CountJob,
+    ExecutionResult,
+    Plan,
+    PlanExecutor,
+    Planner,
+    execute_job,
+)
+from repro.core.specs import REGISTRY, MethodSpec, Param, get_spec, method_names
 from repro.core.types import DenseSink, FileSink, StatsSink, read_pair_file
 
 __all__ = [
     "METHODS",
+    "REGISTRY",
+    "MethodSpec",
+    "Param",
+    "get_spec",
+    "method_names",
+    "CountJob",
+    "Plan",
+    "Planner",
+    "PlanExecutor",
+    "ExecutionResult",
+    "execute_job",
     "count",
+    "count_to_store",
     "dense_counts",
     "brute_force_counts",
     "DenseSink",

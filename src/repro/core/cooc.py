@@ -1,4 +1,19 @@
-"""Method registry + single entry point for co-occurrence counting."""
+"""Compatibility entry points over the typed counting-plan API.
+
+The method registry now lives in ``core/specs.py`` (typed ``MethodSpec``
+records with validated params and §3 cost models) and planning/execution in
+``core/plan.py`` (``CountJob`` → ``Planner`` → ``Plan`` → ``PlanExecutor``).
+This module keeps the original call signatures as thin shims:
+
+* ``count(method, c, sink, **kwargs)``   — one validated method invocation;
+* ``dense_counts(method, c, **kwargs)``  — dense matrix convenience (tests);
+* ``count_to_store(method, c, path)``    — count straight into a store;
+* ``METHODS``                            — legacy name → callable view.
+
+Migration: ``count("auto", ...)`` is not supported here — build a
+``CountJob`` (with ``method="auto"``) and go through the ``Planner`` so the
+selection is recorded in the plan.
+"""
 
 from __future__ import annotations
 
@@ -6,40 +21,26 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.hybrid import count_freq_split
-from repro.core.list_blocks import count_list_blocks, count_list_blocks_gram
-from repro.core.list_pairs import count_list_pairs, count_list_pairs_bitpacked
-from repro.core.list_scan import count_list_scan, count_list_scan_segment
-from repro.core.multi_scan import count_multi_scan, count_multi_scan_matmul
-from repro.core.naive import count_naive
+from repro.core.specs import REGISTRY, get_spec
 from repro.core.types import DenseSink, PairSink
 from repro.data.corpus import Collection
 
-# name -> counting callable(collection, sink, **kwargs) -> stats dict
-METHODS: dict[str, Callable] = {
-    # paper-faithful algorithms (§2)
-    "naive": count_naive,
-    "list-pairs": count_list_pairs,
-    "list-blocks": count_list_blocks,
-    "list-scan": count_list_scan,
-    "multi-scan": count_multi_scan,
-    # TPU adaptations (same traversal orders, MXU/VPU execution)
-    "list-pairs-bitpacked": count_list_pairs_bitpacked,
-    "list-blocks-gram": count_list_blocks_gram,
-    "list-scan-segment": count_list_scan_segment,
-    "multi-scan-matmul": count_multi_scan_matmul,
-    # beyond-paper hybrid
-    "freq-split": count_freq_split,
-}
+# legacy view of the typed registry (name -> counting callable); kept for
+# callers that introspect the method set
+METHODS: dict[str, Callable] = {name: spec.fn for name, spec in REGISTRY.items()}
 
 
 def count(method: str, c: Collection, sink: PairSink | None = None, **kwargs):
-    """Run ``method`` over collection ``c``. Returns (sink, stats)."""
-    if method not in METHODS:
-        raise KeyError(f"unknown method {method!r}; have {sorted(METHODS)}")
+    """Run ``method`` over collection ``c``. Returns (sink, stats).
+
+    Compatibility shim over the typed registry: kwargs are validated against
+    the method's ``MethodSpec`` (unknown or ill-typed params raise TypeError)
+    and the output is byte-identical to calling the method directly.
+    """
+    spec = get_spec(method)  # KeyError for unknown methods (seed behavior)
     if sink is None:
         sink = DenseSink(c.vocab_size)
-    stats = METHODS[method](c, sink, **kwargs)
+    stats = spec.run(c, sink, **kwargs)
     return sink, stats
 
 
@@ -55,24 +56,27 @@ def count_to_store(
     store_path: str,
     *,
     memory_budget_pairs: int = 4 << 20,
+    num_shards: int = 1,
+    df_descending: bool = False,
     **kwargs,
 ):
-    """Count ``c`` with ``method`` straight into a persistent queryable store
-    (repro.store): output streams through a budgeted SpillSink, so the
-    counting phase holds O(memory_budget_pairs) pairs instead of a dense V×V
-    matrix. Creates the store if ``store_path`` is new, else appends a
-    segment (exact incremental update). Returns (store, segment)."""
-    from repro.store import Store  # deferred: store wires back into count()
+    """Count ``c`` with ``method`` (or ``"auto"``) straight into a persistent
+    queryable store (repro.store) through the plan executor: output streams
+    through budgeted per-shard SpillSinks, so the counting phase holds
+    O(memory_budget_pairs) pairs instead of a dense V×V matrix. Creates the
+    store if ``store_path`` is new, else appends a segment (exact incremental
+    update). Returns (store, segment)."""
+    from repro.core.plan import CountJob, Planner
 
-    if Store.exists(store_path):
-        store = Store.open(store_path)
-        if store.vocab_size != c.vocab_size:
-            raise ValueError(
-                f"store vocab {store.vocab_size} != collection vocab {c.vocab_size}"
-            )
-    else:
-        store = Store.create(store_path, c.vocab_size)
-    seg = store.append_collection(
-        c, method=method, memory_budget_pairs=memory_budget_pairs, **kwargs
+    job = CountJob(
+        collection=c,
+        output="store",
+        method=method,
+        out_path=store_path,
+        memory_budget_pairs=memory_budget_pairs,
+        num_shards=num_shards,
+        df_descending=df_descending,
+        method_kwargs=kwargs,
     )
-    return store, seg
+    res = Planner().plan(job).execute()
+    return res.store, res.segment

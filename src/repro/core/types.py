@@ -95,6 +95,12 @@ class FileSink:
     def close(self):
         self.f.close()
 
+    def __enter__(self) -> "FileSink":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
 
 def iter_pair_file(path: str):
     """Stream (primary, secondaries, counts) rows from a FileSink-format

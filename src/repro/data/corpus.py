@@ -99,6 +99,73 @@ def synthetic_zipf_collection(
     return Collection(ptr, terms.astype(np.int32), vocab)
 
 
+@dataclasses.dataclass(frozen=True)
+class CollectionStats:
+    """The collection statistics the planner's cost models consume (paper §3:
+    asymptotics in documents, postings, df distribution, and vocabulary).
+
+    ``df_rank_cum`` summarizes the df distribution compactly: entry k is the
+    number of postings covered by the 2^k highest-df terms. That is all the
+    FREQ-SPLIT cost model needs (head/tail postings split) without carrying
+    the full df array around in a frozen plan.
+    """
+
+    num_docs: int
+    num_postings: int
+    vocab_size: int
+    live_vocab: int          # terms with df > 0
+    pair_occurrences: int    # Σ_d len_d·(len_d−1)/2
+    max_doc_len: int
+    df_rank_cum: tuple[int, ...]
+
+    @property
+    def avg_doc_len(self) -> float:
+        return self.num_postings / self.num_docs if self.num_docs else 0.0
+
+    @classmethod
+    def from_collection(cls, c: "Collection") -> "CollectionStats":
+        lens = c.doc_lengths()
+        df = np.bincount(c.terms, minlength=c.vocab_size)
+        df_desc = np.sort(df)[::-1]
+        cum = np.cumsum(df_desc, dtype=np.int64)
+        ranks = []
+        r = 1
+        while r < c.vocab_size:
+            ranks.append(r)
+            r *= 2
+        ranks.append(c.vocab_size)
+        return cls(
+            num_docs=c.num_docs,
+            num_postings=c.num_postings,
+            vocab_size=c.vocab_size,
+            live_vocab=int((df > 0).sum()),
+            pair_occurrences=int(
+                (lens.astype(np.int64) * (lens - 1) // 2).sum()
+            ),
+            max_doc_len=int(lens.max()) if len(lens) else 0,
+            df_rank_cum=tuple(int(cum[r - 1]) for r in ranks),
+        )
+
+    def postings_in_top(self, h: int) -> int:
+        """Postings covered by the ``h`` highest-df terms (log-interpolated
+        from the rank samples)."""
+        if h <= 0 or not self.df_rank_cum:
+            return 0
+        ranks = [min(1 << k, self.vocab_size) for k in range(len(self.df_rank_cum))]
+        ranks[-1] = self.vocab_size
+        if h >= self.vocab_size:
+            return self.df_rank_cum[-1]
+        for k in range(len(ranks)):
+            if ranks[k] >= h:
+                if ranks[k] == h or k == 0:
+                    return self.df_rank_cum[k]
+                lo_r, hi_r = ranks[k - 1], ranks[k]
+                lo_c, hi_c = self.df_rank_cum[k - 1], self.df_rank_cum[k]
+                frac = (h - lo_r) / (hi_r - lo_r)
+                return int(lo_c + frac * (hi_c - lo_c))
+        return self.df_rank_cum[-1]
+
+
 def collection_stats(c: Collection) -> dict:
     """Table 1 statistics (exact pair count done by the core methods; here we
     report the closed-form per-document pair total = Σ len·(len−1)/2 which is

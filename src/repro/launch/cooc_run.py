@@ -1,16 +1,24 @@
 """End-to-end co-occurrence driver (the paper's pipeline, production shape).
 
     PYTHONPATH=src python -m repro.launch.cooc_run --docs 20000 --vocab 50000 \
-        --method freq-split --out /tmp/cooc_out
+        --method auto --out /tmp/cooc_out
 
 Pipeline: synthetic/loaded corpus → preprocess (dedup/sort, df-descending
-IDs) → document shards as independent work units (WorkTracker: leases,
-straggler re-enqueue, idempotent completion) → per-shard exact counting →
-additive merge → paper-format output + Table-1 stats.
+IDs) → CountJob → Planner (cost-model method selection with ``--method
+auto``, sink policy) → PlanExecutor (document shards as independent work
+units behind a WorkTracker: leases, straggler re-enqueue, idempotent
+completion; per-shard exact counting; additive merge) → paper-format output
++ Table-1 stats.
 
-Checkpoint/restart: the accumulator + tracker state are checkpointed every
---ckpt-every completed shards; `--resume` continues a killed run without
-recounting finished shards.
+Every run is **exact**, whatever the vocabulary size: small vocabularies
+merge through a dense accumulator, larger ones spill per-shard sorted runs
+and k-way-merge them within the memory budget (the old approximate
+"StatsSink upper bound across shards" fallback is gone — the result dict's
+``"exact"`` field records the guarantee).
+
+Checkpoint/restart: tracker + accumulator state are checkpointed every
+--ckpt-every completed shards (spill runs persist on disk per shard);
+`--resume` continues a killed run without recounting finished shards.
 """
 
 from __future__ import annotations
@@ -18,108 +26,47 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
-import numpy as np
-
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from repro.core.cooc import count
-from repro.core.stats import top_k_pairs
-from repro.core.types import DenseSink, FileSink, StatsSink
+from repro.core.plan import CountJob, Planner
 from repro.data.corpus import collection_stats, synthetic_zipf_collection
-from repro.data.preprocess import remap_df_descending, shard_documents
-from repro.runtime.fault import WorkTracker
+from repro.data.preprocess import remap_df_descending
 
 
 def run(
     num_docs: int = 20_000,
     vocab: int = 50_000,
-    method: str = "freq-split",
+    method: str = "auto",
     num_shards: int = 16,
     out_dir: str = "/tmp/cooc_out",
     ckpt_every: int = 4,
     resume: bool = False,
     dense_vocab_cap: int = 4096,
+    memory_budget_pairs: int = 4 << 20,
 ) -> dict:
     os.makedirs(out_dir, exist_ok=True)
-    t0 = time.time()
     c = synthetic_zipf_collection(num_docs, vocab=vocab, mean_len=60, seed=0)
     cd, _ = remap_df_descending(c)
-    stats = collection_stats(cd)
-    print(f"[corpus] {stats}")
+    print(f"[corpus] {collection_stats(cd)}")
 
-    # Small vocabularies merge exactly via a dense accumulator; larger runs
-    # stream per-shard StatsSink aggregates (exactness per shard, additive).
-    dense = cd.vocab_size <= dense_vocab_cap
+    job = CountJob(
+        collection=cd,
+        output="pairs-file",
+        method=method,
+        out_path=os.path.join(out_dir, "pairs.bin"),
+        num_shards=num_shards,
+        dense_vocab_cap=dense_vocab_cap,
+        memory_budget_pairs=memory_budget_pairs,
+        df_descending=True,   # remap_df_descending above
+        use_kernel=False,     # host driver: jnp oracle paths
+    )
+    plan = Planner().plan(job)
+    print(
+        f"[plan] method={plan.method} sink={plan.sink_policy} "
+        f"exact={plan.exact} ranking={plan.describe()['ranking']}"
+    )
+    res = plan.execute(out_dir=out_dir, ckpt_every=ckpt_every, resume=resume)
 
-    shards = shard_documents(cd, num_shards)
-    tracker = WorkTracker([(s,) for s in range(num_shards)])
-    acc = np.zeros((cd.vocab_size, cd.vocab_size), dtype=np.int64) if dense else None
-    agg = {"distinct_pairs": 0, "total_count": 0, "output_bytes": 0}
-
-    ckpt_dir = os.path.join(out_dir, "ckpt")
-    step0 = latest_step(ckpt_dir) if resume else None
-    if step0 is not None:
-        like = {"acc": acc} if dense else {"acc": np.zeros(1)}
-        restored, extra = restore_checkpoint(ckpt_dir, step0, like)
-        if dense:
-            acc = np.array(restored["acc"])  # writable copy (jax arrays are RO)
-        agg = extra["agg"]
-        tracker = WorkTracker.from_state(extra["tracker"])
-        print(f"[resume] from step {step0}: {len(tracker.done)} shards done")
-
-    done_since_ckpt = 0
-    while not tracker.finished:
-        unit = tracker.claim("worker0", time.monotonic())
-        if unit is None:
-            tracker.expire(time.monotonic())
-            continue
-        (s,) = unit
-        shard = shards[s]
-        if dense:
-            sink = DenseSink(cd.vocab_size)
-        else:
-            sink = StatsSink()
-        kwargs = dict(head=min(1024, cd.vocab_size), use_kernel=False) if method == "freq-split" else {}
-        count(method, shard, sink, **kwargs)
-        if tracker.complete(unit, "worker0"):
-            if dense:
-                acc += sink.mat
-            else:
-                agg["distinct_pairs"] += sink.distinct_pairs  # upper bound across shards
-                agg["total_count"] += sink.total_count
-                agg["output_bytes"] += sink.output_bytes
-            done_since_ckpt += 1
-        if done_since_ckpt >= ckpt_every:
-            save_checkpoint(
-                ckpt_dir, len(tracker.done),
-                {"acc": acc if dense else np.zeros(1)},
-                extra={"agg": agg, "tracker": tracker.state()},
-            )
-            done_since_ckpt = 0
-            print(f"[ckpt] {len(tracker.done)}/{num_shards} shards")
-
-    elapsed = time.time() - t0
-    result = {
-        "num_docs": num_docs,
-        "method": method,
-        "elapsed_s": round(elapsed, 2),
-        "docs_per_hour": round(num_docs / elapsed * 3600),
-    }
-    if dense:
-        upper = np.triu(acc, 1)
-        result["distinct_pairs"] = int((upper > 0).sum())
-        result["total_count"] = int(upper.sum())
-        result["top_pairs"] = top_k_pairs(upper, 5)
-        # paper-format output file
-        sink = FileSink(os.path.join(out_dir, "pairs.bin"))
-        for i in range(cd.vocab_size):
-            nz = np.nonzero(upper[i])[0]
-            if len(nz):
-                sink.emit_row(i, nz, upper[i][nz])
-        sink.close()
-    else:
-        result["total_count"] = agg["total_count"]
+    result = res.summary
     with open(os.path.join(out_dir, "result.json"), "w") as f:
         json.dump(result, f, indent=2)
     print(f"[done] {result}")
@@ -130,12 +77,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=20_000)
     ap.add_argument("--vocab", type=int, default=50_000)
-    ap.add_argument("--method", default="freq-split")
+    ap.add_argument("--method", default="auto")
     ap.add_argument("--shards", type=int, default=16)
     ap.add_argument("--out", default="/tmp/cooc_out")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--budget-pairs", type=int, default=4 << 20)
     args = ap.parse_args()
-    run(args.docs, args.vocab, args.method, args.shards, args.out, resume=args.resume)
+    run(
+        args.docs,
+        args.vocab,
+        args.method,
+        args.shards,
+        args.out,
+        resume=args.resume,
+        memory_budget_pairs=args.budget_pairs,
+    )
 
 
 if __name__ == "__main__":

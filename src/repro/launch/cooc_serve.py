@@ -1,7 +1,7 @@
 """Co-occurrence query serving driver (the statistic's serving side).
 
     PYTHONPATH=src python -m repro.launch.cooc_serve --docs 5000 --vocab 4096 \
-        --method list-scan --queries 2000 --batch 64 --topk 10 --score pmi
+        --method auto --queries 2000 --batch 64 --topk 10 --score pmi
 
 Builds (or opens, with --store) a persistent co-occurrence store, then
 replays a Zipf-skewed query workload — the access pattern of real serving
@@ -37,7 +37,7 @@ def _percentiles(lat_s: list[float]) -> dict:
 def serve(
     docs: int = 5_000,
     vocab: int = 4_096,
-    method: str = "list-scan",
+    method: str = "auto",
     store_path: str | None = None,
     budget_pairs: int = 1 << 20,
     queries: int = 2_000,
@@ -61,7 +61,8 @@ def serve(
         )
         build_s = time.perf_counter() - t0
         print(
-            f"[build] {seg.nnz} pairs from {docs} docs in {build_s:.2f}s "
+            f"[build] {seg.nnz} pairs from {docs} docs via "
+            f"{seg.meta.get('source', method)} in {build_s:.2f}s "
             f"({docs / build_s * 3600:.0f} docs/hour) -> {store_path}"
         )
 
@@ -119,7 +120,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=5_000)
     ap.add_argument("--vocab", type=int, default=4_096)
-    ap.add_argument("--method", default="list-scan")
+    ap.add_argument(
+        "--method", default="auto",
+        help='counting method for the build ("auto" = cost-model planner)',
+    )
     ap.add_argument("--store", default=None, help="reuse/persist a store dir")
     ap.add_argument("--budget-pairs", type=int, default=1 << 20)
     ap.add_argument("--queries", type=int, default=2_000)

@@ -141,6 +141,13 @@ class SpillSink:
         if self._buffered >= self.memory_budget_pairs:
             self._spill()
 
+    # ------------------------------------------------------ context manager
+    def __enter__(self) -> "SpillSink":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
     # ---------------------------------------------------------- spilling
     def _drain_buffer(self) -> tuple[np.ndarray, np.ndarray]:
         """Sort + aggregate the live buffer into unique (key, count) arrays."""
@@ -161,15 +168,20 @@ class SpillSink:
                 "format; lower memory_budget_pairs or pre-split the input"
             )
         path = os.path.join(self.spill_dir, f"run_{len(self.runs):05d}.bin")
-        run_sink = FileSink(path)
-        for primary, secs, row_cnts in _rows_from_sorted_keys(
-            keys, cnts, self.vocab_size
-        ):
-            run_sink.emit_row(primary, secs, row_cnts)
-        run_sink.close()
+        with FileSink(path) as run_sink:
+            for primary, secs, row_cnts in _rows_from_sorted_keys(
+                keys, cnts, self.vocab_size
+            ):
+                run_sink.emit_row(primary, secs, row_cnts)
         self.runs.append(path)
         self.stats["spills"] += 1
         self.stats["spilled_bytes"] += os.path.getsize(path)
+
+    def flush(self) -> None:
+        """Force the live buffer to disk as a sorted run. After a flush the
+        run files alone carry the sink's full state — the PlanExecutor uses
+        this to make completed shards' spill directories restart-safe."""
+        self._spill()
 
     # --------------------------------------------------------- finalize
     def merged_rows(self):

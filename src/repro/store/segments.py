@@ -127,6 +127,25 @@ class Store:
         self._save()
         return seg
 
+    def add_segment_from_rows(
+        self,
+        rows,
+        *,
+        df: np.ndarray | None = None,
+        num_docs: int = 0,
+        source: str = "rows",
+    ) -> CSRSegment:
+        """Write a merged (primary, secondaries, counts) row stream — strictly
+        ascending primaries, unique pairs — as a new segment. The single
+        segment-adding primitive behind counting, ingest, and compaction."""
+        name, seg_dir = self._new_segment_dir()
+        write_segment(
+            seg_dir, rows, self.vocab_size, df=df, num_docs=num_docs, source=source
+        )
+        self.manifest["segments"].append(name)
+        self._save()
+        return self._segment(name)
+
     def append_collection(
         self,
         c,
@@ -136,44 +155,53 @@ class Store:
         **kwargs,
     ) -> CSRSegment:
         """Count a new document batch and append it as a segment (the exact
-        incremental path: no existing segment is touched)."""
+        incremental path: no existing segment is touched). ``method`` may be
+        ``"auto"`` — the planner's cost models pick it."""
         from repro.core.cooc import count  # lazy: core wires back into us
 
-        sink = SpillSink(
+        if method == "auto":
+            if kwargs:
+                raise ValueError(
+                    "method kwargs require an explicit method (auto-selected "
+                    "methods run with planner-resolved params)"
+                )
+            from repro.core.plan import CountJob, Planner
+
+            plan = Planner().plan(
+                CountJob(
+                    collection=c,
+                    output="stats",
+                    memory_budget_pairs=memory_budget_pairs,
+                )
+            )
+            method, kwargs = plan.method, dict(plan.method_kwargs)
+        with SpillSink(
             self.vocab_size, memory_budget_pairs=memory_budget_pairs
-        )
-        try:
+        ) as sink:
             count(method, c, sink, **kwargs)
             df = np.bincount(c.terms, minlength=self.vocab_size).astype(np.int64)
             return self.add_segment_from_sink(
                 sink, df=df, num_docs=c.num_docs, source=f"count:{method}"
             )
-        finally:
-            sink.close()
 
     def ingest_store(self, other: "Store") -> CSRSegment:
         """Merge another store's segments (e.g. a per-shard store from the
         distributed runner) into one new segment here. Exact: counts add."""
         if other.vocab_size != self.vocab_size:
             raise ValueError("vocab mismatch")
-        segs = other.segments
-        name, seg_dir = self._new_segment_dir()
-        df = other.df()
-        write_segment(
-            seg_dir,
-            merge_row_streams([s.iter_rows() for s in segs]),
-            self.vocab_size,
-            df=df,
+        return self.add_segment_from_rows(
+            merge_row_streams([s.iter_rows() for s in other.segments]),
+            df=other.df(),
             num_docs=other.num_docs,
             source=f"ingest:{os.path.basename(other.path)}",
         )
-        self.manifest["segments"].append(name)
-        self._save()
-        return self._segment(name)
 
     def compact(self) -> CSRSegment:
         """Merge all segments into one (LSM major compaction). Queries before
-        and after return identical counts."""
+        and after return identical counts. The manifest is committed exactly
+        once, *after* the merged segment is fully written — a crash mid-way
+        leaves only an orphan directory, never double-counted segments (so
+        this cannot go through ``add_segment_from_rows``, which appends)."""
         old_names = self.segment_names
         old_segs = [self._segment(n) for n in old_names]
         df = self.df()

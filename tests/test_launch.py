@@ -72,12 +72,33 @@ def test_cooc_run_end_to_end_and_resume(tmp_path):
     c = synthetic_zipf_collection(200, vocab=300, mean_len=60, seed=0)
     cd, _ = remap_df_descending(c)
     oracle = brute_force_counts(cd)
+    assert res["exact"] is True
     assert res["distinct_pairs"] == int((oracle > 0).sum())
     assert res["total_count"] == int(oracle.sum())
     # resume from the checkpoint: counts must not double
     res2 = run(num_docs=200, vocab=300, method="freq-split", num_shards=5,
                out_dir=out, ckpt_every=2, resume=True)
+    assert res2["exact"] is True
     assert res2["total_count"] == res["total_count"]
+
+
+def test_cooc_run_large_vocab_exact(tmp_path):
+    """vocab > dense_vocab_cap used to fall back to a lossy StatsSink
+    aggregate ('upper bound across shards'); the plan executor must now merge
+    exactly via spilled runs — identical to a dense run of the same corpus."""
+    from repro.launch.cooc_run import run
+
+    dense = run(num_docs=150, vocab=400, method="auto", num_shards=4,
+                out_dir=str(tmp_path / "dense"), dense_vocab_cap=4096)
+    spill = run(num_docs=150, vocab=400, method="auto", num_shards=4,
+                out_dir=str(tmp_path / "spill"), dense_vocab_cap=64)
+    assert dense["exact"] is True and spill["exact"] is True
+    assert spill["distinct_pairs"] == dense["distinct_pairs"]
+    assert spill["total_count"] == dense["total_count"]
+    # the paper-format output files are byte-identical across merge policies
+    with open(tmp_path / "dense" / "pairs.bin", "rb") as a, \
+         open(tmp_path / "spill" / "pairs.bin", "rb") as b:
+        assert a.read() == b.read()
 
 
 def test_roofline_collective_parser():

@@ -1,0 +1,391 @@
+"""The typed counting-plan API (core/specs.py + core/plan.py).
+
+Golden auto-selection across small/medium/large collections, cost-model
+monotonicity, CountJob validation, byte-identity of the count() compat shim
+with the seed API, exactness of every sink policy against the dense oracle,
+and the executor's checkpoint/resume on the spill path."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.cooc import METHODS, count, count_to_store, dense_counts
+from repro.core.oracle import brute_force_counts
+from repro.core.plan import CountJob, Plan, PlanExecutor, Planner, execute_job
+from repro.core.specs import REGISTRY, get_spec
+from repro.core.types import DenseSink, FileSink, StatsSink
+from repro.data.corpus import CollectionStats, synthetic_zipf_collection
+from repro.data.preprocess import remap_df_descending
+
+
+@pytest.fixture(scope="module")
+def coll():
+    return synthetic_zipf_collection(80, vocab=150, mean_len=14, seed=11)
+
+
+@pytest.fixture(scope="module")
+def oracle(coll):
+    return brute_force_counts(coll)
+
+
+# ---------------------------------------------------------------------------
+# MethodSpec registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_legacy_methods():
+    assert set(METHODS) == set(REGISTRY)
+    for name, spec in REGISTRY.items():
+        assert spec.name == name
+        assert METHODS[name] is spec.fn
+        assert spec.kind in ("paper", "tpu", "hybrid")
+
+
+def test_spec_param_validation():
+    spec = get_spec("naive")
+    assert spec.resolve_kwargs() == {"flush_pairs": 2_000_000}
+    assert spec.resolve_kwargs({"flush_pairs": 7}) == {"flush_pairs": 7}
+    with pytest.raises(TypeError):
+        spec.validate_kwargs({"bogus": 1})
+    with pytest.raises(TypeError):
+        spec.validate_kwargs({"flush_pairs": "many"})
+    with pytest.raises(TypeError):
+        spec.validate_kwargs({"flush_pairs": True})  # bool is not an int here
+    with pytest.raises(ValueError):
+        spec.validate_kwargs({"flush_pairs": 0})
+    # allow_none params accept their None default explicitly
+    assert get_spec("list-blocks").resolve_kwargs({"block_size": None}) == {
+        "block_size": None
+    }
+
+
+def test_count_shim_validates_and_matches_seed(coll, oracle):
+    """count() must behave exactly like the seed entry point."""
+    with pytest.raises(KeyError):
+        count("no-such-method", coll)
+    with pytest.raises(TypeError):
+        count("list-scan", coll, StatsSink(), bogus=3)
+    # identical results to calling the registered function directly
+    for method in ["naive", "list-scan", "multi-scan"]:
+        direct = DenseSink(coll.vocab_size)
+        REGISTRY[method].fn(coll, direct)
+        assert np.array_equal(dense_counts(method, coll), direct.mat)
+        assert np.array_equal(direct.mat, oracle)
+
+
+def test_count_shim_pair_file_byte_identical(tmp_path, coll):
+    """FileSink output through the shim is byte-identical to the direct
+    seed-style invocation."""
+    p_shim = str(tmp_path / "shim.bin")
+    p_direct = str(tmp_path / "direct.bin")
+    with FileSink(p_shim) as sink:
+        count("list-scan", coll, sink)
+    direct = FileSink(p_direct)  # seed style: manual close
+    REGISTRY["list-scan"].fn(coll, direct)
+    direct.close()
+    with open(p_shim, "rb") as a, open(p_direct, "rb") as b:
+        assert a.read() == b.read()
+
+
+# ---------------------------------------------------------------------------
+# cost models + auto selection
+# ---------------------------------------------------------------------------
+
+
+def _stats(num_docs, vocab, mean_len, seed=5):
+    c = synthetic_zipf_collection(num_docs, vocab=vocab, mean_len=mean_len, seed=seed)
+    return CollectionStats.from_collection(c)
+
+
+def _auto_pick(stats):
+    ranked = sorted(
+        (spec.cost(stats, spec.defaults()), name)
+        for name, spec in REGISTRY.items()
+        if spec.kind == "paper"
+    )
+    return ranked[0][1]
+
+
+def test_auto_selection_golden_small_medium_large():
+    """The paper's narrative: LIST-PAIRS wins at small scale, the
+    block/scan family asymptotically — at least 3 distinct methods across
+    the sweep (acceptance criterion)."""
+    small = _stats(400, 64, 60)
+    medium = _stats(1_500, 30_000, 40)
+    large = _stats(40_000, 16_000, 50)
+    picks = {
+        "small": _auto_pick(small),
+        "medium": _auto_pick(medium),
+        "large": _auto_pick(large),
+    }
+    assert picks["small"] == "list-pairs"
+    assert picks["medium"] == "list-blocks"
+    assert picks["large"] == "list-scan"
+    assert len(set(picks.values())) >= 3
+
+
+def test_auto_selection_via_planner(coll):
+    """End-to-end: Planner.rank on real CountJobs picks the golden methods."""
+    small = synthetic_zipf_collection(400, vocab=64, mean_len=60, seed=5)
+    medium = synthetic_zipf_collection(1_500, vocab=30_000, mean_len=40, seed=5)
+    planner = Planner()
+    picks = set()
+    for c in (small, medium):
+        plan = planner.plan(CountJob(collection=c, output="stats", method="auto"))
+        picks.add(plan.method)
+        assert plan.ranking[0][0] == plan.method
+        # ranking is sorted best-first
+        costs = [cost for _, cost in plan.ranking]
+        assert costs == sorted(costs)
+    assert picks == {"list-pairs", "list-blocks"}
+
+
+def test_auto_never_picks_naive_or_tpu():
+    """NAÏVE 'is indeed very slow' (abstract) — it must never win; TPU
+    adaptations are explicit opt-ins."""
+    for d, v, l in [(400, 64, 60), (1_500, 30_000, 40), (40_000, 16_000, 50)]:
+        stats = _stats(d, v, l)
+        assert _auto_pick(stats) != "naive"
+    job = CountJob(
+        collection=synthetic_zipf_collection(50, vocab=100, mean_len=10, seed=0),
+        output="stats",
+    )
+    names = {s.name for s in Planner().candidates(job)}
+    assert not any(REGISTRY[n].kind == "tpu" for n in names)
+    assert "freq-split" not in names  # needs df-descending IDs
+
+
+def test_freq_split_eligible_and_wins_when_df_descending():
+    c = synthetic_zipf_collection(400, vocab=2_000, mean_len=40, seed=5)
+    cd, _ = remap_df_descending(c)
+    job = CountJob(collection=cd, output="stats", df_descending=True)
+    names = {s.name for s in Planner().candidates(job)}
+    assert "freq-split" in names
+    # on a df-descending large collection the hybrid's model beats list-scan
+    stats = _stats(40_000, 16_000, 50)
+    fs = REGISTRY["freq-split"]
+    ls = REGISTRY["list-scan"]
+    assert fs.cost(stats, fs.defaults()) < ls.cost(stats, ls.defaults())
+
+
+def test_cost_model_monotonic_in_docs():
+    """More documents never gets cheaper (vocab fixed) — for every method."""
+    full = synthetic_zipf_collection(4_000, vocab=8_000, mean_len=40, seed=7)
+    prev: dict[str, float] = {}
+    for n in (500, 1_000, 2_000, 4_000):
+        stats = CollectionStats.from_collection(full.head(n))
+        for name, spec in REGISTRY.items():
+            cost = spec.cost(stats, spec.defaults())
+            assert cost > 0
+            if name in prev:
+                assert cost >= prev[name], (name, n)
+            prev[name] = cost
+
+
+def test_collection_stats_df_distribution():
+    c = synthetic_zipf_collection(300, vocab=4_000, mean_len=30, seed=3)
+    s = CollectionStats.from_collection(c)
+    df = np.bincount(c.terms, minlength=c.vocab_size)
+    assert s.num_postings == c.num_postings
+    assert s.live_vocab == int((df > 0).sum())
+    assert s.df_rank_cum[-1] == c.num_postings
+    # postings_in_top interpolates monotonically up to the full mass
+    tops = [s.postings_in_top(h) for h in (0, 1, 10, 100, 1_000, 4_000, 10_000)]
+    assert tops == sorted(tops)
+    assert tops[0] == 0 and tops[-1] == c.num_postings
+    assert s.postings_in_top(1) == int(df.max())
+
+
+# ---------------------------------------------------------------------------
+# CountJob validation
+# ---------------------------------------------------------------------------
+
+
+def test_count_job_validation(coll):
+    good = CountJob(collection=coll, output="stats")
+    assert good.method == "auto"
+    with pytest.raises(ValueError):
+        CountJob(collection="nope", output="stats")
+    with pytest.raises(ValueError):
+        CountJob(collection=coll, output="matrix")
+    with pytest.raises(ValueError):
+        CountJob(collection=coll, output="pairs-file")  # out_path missing
+    with pytest.raises(ValueError):
+        CountJob(collection=coll, output="store")
+    with pytest.raises(ValueError):
+        CountJob(collection=coll, output="stats", num_shards=0)
+    with pytest.raises(ValueError):
+        CountJob(collection=coll, output="stats", memory_budget_pairs=0)
+    with pytest.raises(ValueError):
+        CountJob(collection=coll, output="stats", method="no-such-method")
+    with pytest.raises(ValueError):
+        CountJob(collection=coll, output="stats", method="freq-split")  # needs df order
+    with pytest.raises(ValueError):
+        CountJob(
+            collection=coll, output="stats", method="naive",
+            method_kwargs={"bogus": 1},
+        )
+    with pytest.raises(ValueError):
+        CountJob(collection=coll, output="stats", method_kwargs={"head": 8})  # auto
+
+
+# ---------------------------------------------------------------------------
+# execution: every sink policy bit-exact vs the dense oracle
+# ---------------------------------------------------------------------------
+
+
+def test_plan_dense_output_exact(coll, oracle):
+    res = execute_job(CountJob(collection=coll, output="dense", method="auto"))
+    assert res.summary["exact"] is True
+    assert np.array_equal(res.counts, oracle)
+    assert res.summary["distinct_pairs"] == int((oracle > 0).sum())
+    assert res.summary["total_count"] == int(oracle.sum())
+
+
+def test_plan_spill_policy_exact(coll, oracle):
+    """Forcing the spill policy (tiny dense cap, several shards, tiny memory
+    budget → many runs) must still merge bit-exactly."""
+    job = CountJob(
+        collection=coll, output="stats", method="list-scan",
+        dense_vocab_cap=1, num_shards=4, memory_budget_pairs=64,
+    )
+    plan = Planner().plan(job)
+    assert plan.sink_policy == "spill"
+    res = plan.execute()
+    assert res.summary["exact"] is True
+    assert res.summary["distinct_pairs"] == int((oracle > 0).sum())
+    assert res.summary["total_count"] == int(oracle.sum())
+
+
+def test_plan_pairs_file_spill_matches_dense(tmp_path, coll):
+    """pairs.bin written through the spill merge is byte-identical to the
+    dense-merge file."""
+    p_dense = str(tmp_path / "dense.bin")
+    p_spill = str(tmp_path / "spill.bin")
+    execute_job(
+        CountJob(collection=coll, output="pairs-file", method="list-scan",
+                 out_path=p_dense)
+    )
+    execute_job(
+        CountJob(collection=coll, output="pairs-file", method="list-scan",
+                 out_path=p_spill, dense_vocab_cap=1, num_shards=3,
+                 memory_budget_pairs=128)
+    )
+    with open(p_dense, "rb") as a, open(p_spill, "rb") as b:
+        assert a.read() == b.read()
+
+
+def test_plan_store_output(tmp_path, coll, oracle):
+    res = execute_job(
+        CountJob(collection=coll, output="store", method="auto",
+                 out_path=str(tmp_path / "store"), dense_vocab_cap=1,
+                 num_shards=2)
+    )
+    assert res.store is not None and res.segment is not None
+    assert np.array_equal(res.store.dense(), oracle)
+    assert res.summary["distinct_pairs"] == int((oracle > 0).sum())
+
+
+def test_plan_stats_inexact_optout(coll, oracle):
+    """exact=False is the only way to get the old upper-bound behavior, and
+    it is labelled as such."""
+    job = CountJob(
+        collection=coll, output="stats", method="list-scan", exact=False,
+        dense_vocab_cap=1, num_shards=3,
+    )
+    plan = Planner().plan(job)
+    assert plan.sink_policy == "stats" and plan.exact is False
+    res = plan.execute()
+    assert res.summary["exact"] is False
+    assert "distinct_pairs" not in res.summary  # no exact claim
+    assert res.summary["distinct_pairs_upper_bound"] >= int((oracle > 0).sum())
+    assert res.summary["total_count"] == int(oracle.sum())  # additive → exact
+
+
+def test_every_paper_method_exact_through_spill_plan(coll, oracle):
+    """Cross product: each paper method through the spill executor stays
+    bit-exact (the plan layer must not perturb any method's output)."""
+    for method in ("naive", "list-pairs", "list-blocks", "list-scan", "multi-scan"):
+        res = execute_job(
+            CountJob(collection=coll, output="stats", method=method,
+                     dense_vocab_cap=1, num_shards=2, memory_budget_pairs=256)
+        )
+        assert res.summary["distinct_pairs"] == int((oracle > 0).sum()), method
+        assert res.summary["total_count"] == int(oracle.sum()), method
+
+
+def test_executor_resume_spill(tmp_path, coll, oracle):
+    """Kill-resume on the spill path: completed shards' run files are reused,
+    remaining shards recounted, totals unchanged."""
+    out = str(tmp_path / "run")
+    job = CountJob(
+        collection=coll, output="stats", method="list-scan",
+        dense_vocab_cap=1, num_shards=6, memory_budget_pairs=128,
+    )
+    plan = Planner().plan(job)
+    res = plan.execute(out_dir=out, ckpt_every=2)
+    assert res.summary["total_count"] == int(oracle.sum())
+    # simulate a restart after completion: resume must not double-count
+    res2 = plan.execute(out_dir=out, ckpt_every=2, resume=True)
+    assert res2.summary["total_count"] == int(oracle.sum())
+    assert res2.summary["distinct_pairs"] == int((oracle > 0).sum())
+
+
+def test_executor_fresh_run_ignores_stale_spill_dirs(tmp_path, coll, oracle):
+    """Re-running (without resume) into an out_dir that a previous run with
+    MORE shards populated must not fold the stale runs into the merge."""
+    out = str(tmp_path / "run")
+    mk = lambda shards: CountJob(
+        collection=coll, output="stats", method="list-scan",
+        dense_vocab_cap=1, num_shards=shards, memory_budget_pairs=128,
+    )
+    res8 = execute_job(mk(8), out_dir=out)
+    res3 = execute_job(mk(3), out_dir=out)  # fewer shards, same out_dir
+    assert res8.summary["total_count"] == int(oracle.sum())
+    assert res3.summary["total_count"] == int(oracle.sum())
+    assert res3.summary["distinct_pairs"] == int((oracle > 0).sum())
+
+
+def test_append_collection_auto_rejects_kwargs(tmp_path, coll):
+    from repro.store import Store
+
+    store = Store.create(str(tmp_path / "s"), coll.vocab_size)
+    with pytest.raises(ValueError):
+        store.append_collection(coll, method="auto", head=512)
+
+
+def test_count_to_store_auto(tmp_path, coll, oracle):
+    store, seg = count_to_store("auto", coll, str(tmp_path / "s"))
+    assert seg.meta["source"].startswith("plan:")
+    assert np.array_equal(store.dense(), oracle)
+
+
+# ---------------------------------------------------------------------------
+# sinks as context managers
+# ---------------------------------------------------------------------------
+
+
+def test_file_sink_context_manager(tmp_path, coll):
+    path = str(tmp_path / "pairs.bin")
+    with FileSink(path) as sink:
+        count("list-scan", coll, sink)
+        assert not sink.f.closed
+    assert sink.f.closed
+
+
+def test_spill_sink_context_manager_cleans_up(coll):
+    from repro.store.builder import SpillSink
+
+    with SpillSink(coll.vocab_size, memory_budget_pairs=64) as sink:
+        count("list-scan", coll, sink)
+        spill_dir = sink.spill_dir
+        assert sink.runs  # tiny budget → must have spilled
+    assert not os.path.isdir(spill_dir)  # closed (and owned dir removed)
+
+    # on error paths too
+    with pytest.raises(RuntimeError):
+        with SpillSink(coll.vocab_size, memory_budget_pairs=64) as sink:
+            spill_dir = sink.spill_dir
+            raise RuntimeError("boom")
+    assert not os.path.isdir(spill_dir)
