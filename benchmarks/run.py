@@ -7,6 +7,9 @@
 #   kernel   — Pallas-kernel oracle micro-benchmarks
 #   throughput — docs/hour headline (paper §1/§4)
 #   store    — store build + query serving (exactness-gated vs naive oracle)
+#
+# The serving benchmark (p50/p99/QPS JSON, in-process vs multi-worker) has
+# its own CLI: `python benchmarks/store_bench.py --json BENCH_serving.json`.
 
 from __future__ import annotations
 

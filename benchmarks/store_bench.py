@@ -1,14 +1,26 @@
 """Store subsystem benchmark: spill-and-merge build + query serving.
 
-Builds a persistent store from a >=10k-doc synthetic collection through a
-SpillSink whose memory budget is far below the distinct-pair count (forcing
-multi-run spill-and-merge), then drives batched top-k and pair-count
-queries — and checks both against the naive dense oracle, so the benchmark
-doubles as an end-to-end exactness gate (ISSUE 1 acceptance criterion).
+Two entry points:
+
+* ``run()`` — the PR-1 CSV rows for ``benchmarks/run.py``: builds a
+  persistent store from a >=10k-doc synthetic collection through a SpillSink
+  whose memory budget is far below the distinct-pair count (forcing
+  multi-run spill-and-merge), then drives batched top-k and pair-count
+  queries — and checks both against the naive dense oracle, so the benchmark
+  doubles as an end-to-end exactness gate (ISSUE 1 acceptance criterion).
+* ``run_serving()`` — the serving benchmark (ISSUE 3): in-process engine vs
+  the multi-process shared-mmap serving layer, reporting p50/p99 latency and
+  QPS per topology as a JSON document (``BENCH_serving.json`` in CI — the
+  first entries of the perf trajectory).
+
+    PYTHONPATH=src:. python benchmarks/store_bench.py \
+        --json BENCH_serving.json --docs 4000 --workers 2 --clients 3
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import tempfile
 
@@ -62,6 +74,12 @@ def run() -> list[str]:
         for i, s in zip(ids[b], scores[b]):
             if i >= 0:
                 assert sym[t][i] == s, f"count mismatch ({t},{i})"
+    # the Pallas serving kernel must agree bit-for-bit with the reference
+    pallas_engine = QueryEngine(store, kernel="pallas")
+    pids, pscores = pallas_engine.topk(terms, k=TOPK, score="count")
+    assert np.array_equal(ids, pids) and np.array_equal(scores, pscores), (
+        "pallas top-k gather disagrees with the numpy reference"
+    )
 
     pairs = rng.integers(0, VOCAB, size=(2_000, 2))
     got = engine.pair_counts(pairs)
@@ -98,5 +116,96 @@ def run() -> list[str]:
     return rows
 
 
+# ---------------------------------------------------------------------------
+# serving benchmark (p50/p99/QPS JSON artifact)
+# ---------------------------------------------------------------------------
+
+
+def run_serving(
+    json_path: str | None = None,
+    *,
+    docs: int = 4_000,
+    vocab: int = 1_024,
+    workers: int = 2,
+    clients: int = 3,
+    queries: int = 768,
+    batch: int = 32,
+    topk: int = TOPK,
+    batch_window_ms: float = 2.0,
+    kernel: str = "numpy",
+    seed: int = 5,
+) -> dict:
+    """Benchmark both serving topologies over one store and emit JSON.
+
+    The in-process engine gives the single-client floor; the served run
+    measures the multi-process shared-mmap layer under ``clients``
+    concurrent threads with micro-batching. Exactness is inherited from the
+    driver (both topologies run the same engines the oracle-gated ``run()``
+    checks; the serving tests assert served == direct)."""
+    from repro.launch.cooc_serve import serve
+
+    store_path = os.path.join(tempfile.mkdtemp(prefix="serving_bench_"), "store")
+    inproc = serve(
+        docs=docs, vocab=vocab, store_path=store_path, queries=queries,
+        batch=batch, topk=topk, workers=0, kernel=kernel, seed=seed,
+    )
+    served = serve(
+        store_path=store_path, queries=queries, batch=batch, topk=topk,
+        workers=workers, clients=clients, batch_window_ms=batch_window_ms,
+        kernel=kernel, seed=seed,
+    )
+    out = {
+        "suite": "serving",
+        "config": {
+            "docs": docs, "vocab": vocab, "queries": queries, "batch": batch,
+            "topk": topk, "workers": workers, "clients": clients,
+            "batch_window_ms": batch_window_ms, "kernel": kernel,
+        },
+        "inprocess": {
+            k: inproc[k]
+            for k in (
+                "build_s", "topk_qps", "topk_p50_ms", "topk_p99_ms",
+                "pair_qps", "pair_p50_ms", "pair_p99_ms",
+            )
+        },
+        "served": {
+            k: served[k]
+            for k in (
+                "topk_qps", "topk_p50_ms", "topk_p99_ms",
+                "pair_qps", "pair_p50_ms", "pair_p99_ms",
+            )
+        },
+        "serving_stats": served["serving"],
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[serving bench] wrote {json_path}")
+    return out
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    # The CLI is the serving benchmark; the CSV oracle-gate suite runs via
+    # `benchmarks/run.py store` (so serving flags can never be silently
+    # ignored by the wrong mode).
+    ap = argparse.ArgumentParser(description=run_serving.__doc__)
+    ap.add_argument(
+        "--json", default=None,
+        help="write the JSON here (default: print to stdout)",
+    )
+    ap.add_argument("--docs", type=int, default=4_000)
+    ap.add_argument("--vocab", type=int, default=1_024)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--queries", type=int, default=768)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--batch-window-ms", type=float, default=2.0)
+    ap.add_argument("--kernel", default="numpy", choices=["numpy", "pallas"])
+    args = ap.parse_args()
+    result = run_serving(
+        args.json, docs=args.docs, vocab=args.vocab, workers=args.workers,
+        clients=args.clients, queries=args.queries, batch=args.batch,
+        batch_window_ms=args.batch_window_ms, kernel=args.kernel,
+    )
+    if not args.json:
+        print(json.dumps(result, indent=2))

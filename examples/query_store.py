@@ -3,8 +3,9 @@
     PYTHONPATH=src python examples/query_store.py
 
 Covers the full store lifecycle: build through a memory-budgeted SpillSink,
-point pair lookups, batched top-k under three scores, an exact incremental
-append of new documents, and compaction back to one segment.
+point pair lookups, batched top-k under three scores (numpy and Pallas
+kernels — identical results), an exact incremental append of new documents,
+compaction back to one segment, and multi-process serving over shared mmaps.
 """
 
 import os
@@ -55,3 +56,25 @@ print(f"after compact: {len(store.segment_names)} segment, "
 # 6. The store can be reopened from disk by a serving process.
 reopened = Store.open(store_path)
 print("reopened:", reopened.num_docs, "docs,", reopened.total_count, "pair mass")
+
+# 7. The Pallas top-k gather kernel (interpreter mode off-TPU) returns
+#    bit-identical results to the jitted-numpy reference.
+pallas_engine = QueryEngine(reopened, kernel="pallas")
+engine = QueryEngine(reopened)
+pids, pscores = pallas_engine.topk(terms, k=5)
+ids, scores = engine.topk(terms, k=5)
+assert np.array_equal(pids, ids) and np.array_equal(pscores, scores)
+print("pallas kernel: identical top-k for", len(terms), "terms")
+
+# 8. Multi-client serving: worker processes share the segment mmaps through
+#    the OS page cache and coalesce concurrent requests into batched kernel
+#    launches (store/serving.py; see docs/architecture.md).
+from repro.store import CoocServer
+
+with CoocServer(store_path, workers=2, batch_window_ms=2.0) as server:
+    client = server.client()
+    sids, sscores = client.topk(terms, k=5)
+    assert np.array_equal(sids, ids) and np.array_equal(sscores, scores)
+print("served identically by", server.stats["workers"], "shared-mmap workers;",
+      server.stats["requests"], "request(s) in", server.stats["batches"],
+      "micro-batch(es)")

@@ -6,6 +6,17 @@ segment-sum), the beyond-paper FREQ-SPLIT hybrid, the distributed
 (multi-pod) Gram accumulation — and the typed counting-plan API
 (``specs``/``plan``): MethodSpec registry with §3 cost models, the Planner
 (``method="auto"``), and the shared shard/merge PlanExecutor.
+
+Entry points (see docs/architecture.md and docs/methods.md)::
+
+    # planned, exact, resumable — the path every driver uses
+    res = execute_job(CountJob(collection=c, output="store",
+                               out_path="/data/store", method="auto"))
+
+    # seed-API shims (validated kwargs, byte-identical output)
+    count("list-scan", c, sink)
+    mat = dense_counts("naive", c)            # strict-upper oracle
+    store, seg = count_to_store("auto", c, "/data/store")
 """
 
 from repro.core.cooc import METHODS, count, count_to_store, dense_counts

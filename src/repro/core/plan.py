@@ -66,7 +66,18 @@ def _default_use_kernel() -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class CountJob:
-    """A validated counting request (what to count, how exact, where to)."""
+    """A validated counting request (what to count, how exact, where to).
+
+    Validation happens at construction: unknown outputs, missing paths,
+    ill-typed method kwargs, and df-order prerequisites all raise here, not
+    halfway through a multi-hour run.
+
+    Example::
+
+        job = CountJob(collection=c, output="store", out_path="/data/store",
+                       method="auto", num_shards=8)
+        res = Planner().plan(job).execute()
+    """
 
     collection: Collection
     output: str = "stats"                  # dense | stats | pairs-file | store
@@ -125,7 +136,20 @@ class CountJob:
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """An executable counting plan (what the Planner decided, and why)."""
+    """An executable counting plan (what the Planner decided, and why).
+
+    Carries full provenance: the chosen method and kwargs, the sink/merge
+    policy, cost estimates, and the complete candidate ranking — so a
+    driver can log *why* this method ran (``describe()``) and a benchmark
+    can compare the model against measured time.
+
+    Example::
+
+        plan = Planner().plan(job)
+        plan.method, plan.sink_policy       # ('list-blocks', 'spill')
+        plan.describe()["ranking"]          # best-first (method, cost) pairs
+        res = plan.execute(out_dir="/tmp/run", ckpt_every=4)
+    """
 
     job: CountJob
     method: str
@@ -163,7 +187,18 @@ class Plan:
 
 
 class Planner:
-    """Turns a CountJob into a Plan using the MethodSpec cost models."""
+    """Turns a CountJob into a Plan using the MethodSpec cost models.
+
+    ``method="auto"`` ranks every eligible paper/hybrid method by its §3
+    cost model over the collection's statistics (docs/methods.md walks the
+    regimes); an explicit method skips ranking but still gets validated
+    kwargs and a merge policy.
+
+    Example::
+
+        plan = Planner().plan(CountJob(collection=c, output="stats"))
+        plan.ranking[0][0] == plan.method   # best-ranked method won
+    """
 
     def __init__(self, registry: Mapping[str, MethodSpec] = REGISTRY):
         self.registry = registry
@@ -245,7 +280,15 @@ class Planner:
 @dataclasses.dataclass
 class ExecutionResult:
     """What a plan produced. ``summary`` is JSON-serializable; the heavier
-    artifacts ride alongside depending on the job's output target."""
+    artifacts ride alongside depending on the job's output target.
+
+    Example::
+
+        res = plan.execute()
+        res.summary["exact"], res.summary["distinct_pairs"]
+        res.store     # output="store": an open repro.store.Store
+        res.counts    # output="dense": strict-upper int64 matrix
+    """
 
     summary: dict
     counts: np.ndarray | None = None       # output="dense" (strict upper)
@@ -263,6 +306,13 @@ class PlanExecutor:
     policy, completed shards' sorted run files in ``out_dir/spill/`` *are*
     the bulk checkpoint state, so only tracker + aggregate dicts go through
     the checkpointer.
+
+    Example::
+
+        res = PlanExecutor(verbose=True).execute(
+            plan, out_dir="/tmp/run", ckpt_every=4)
+        # later, after a crash:
+        res = PlanExecutor().execute(plan, out_dir="/tmp/run", resume=True)
     """
 
     def __init__(self, worker: str = "worker0", verbose: bool = False):
@@ -488,5 +538,11 @@ def _dense_rows(upper: np.ndarray):
 
 
 def execute_job(job: CountJob, **execute_kwargs) -> ExecutionResult:
-    """plan + execute in one call (drivers that don't inspect the plan)."""
+    """Plan + execute in one call (drivers that don't inspect the plan).
+
+    Example::
+
+        res = execute_job(CountJob(collection=c, output="dense"))
+        res.counts.sum()    # total co-occurrence mass, exactly
+    """
     return Planner().plan(job).execute(**execute_kwargs)

@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the counting hot paths (Gram matmul, bit-packed
+intersection, segment histograms) and the serving hot path (fused top-k
+gather). Every kernel has a jnp reference implementation and an interpreter
+path so CPU CI exercises the exact kernel code.
+
+Only the serving kernel is re-exported here; counting methods import their
+kernel module directly (kernels.cooc_gram, kernels.bitpair, ...).
+"""
+
+from repro.kernels.topk_gather import topk_gather
+
+__all__ = ["topk_gather"]

@@ -1,28 +1,42 @@
 """Co-occurrence query serving driver (the statistic's serving side).
 
     PYTHONPATH=src python -m repro.launch.cooc_serve --docs 5000 --vocab 4096 \
-        --method auto --queries 2000 --batch 64 --topk 10 --score pmi
+        --method auto --queries 2000 --batch 64 --topk 10 --score pmi \
+        --workers 4 --clients 4 --batch-window-ms 2 --kernel pallas
 
 Builds (or opens, with --store) a persistent co-occurrence store, then
 replays a Zipf-skewed query workload — the access pattern of real serving
-traffic, where popular terms dominate — through the batched QueryEngine.
-Reports build throughput plus per-batch latency percentiles and QPS for
-both top-k and pair-count queries, mirroring launch/serve.py's role for the
-LM stack.
+traffic, where popular terms dominate — and reports build throughput plus
+per-request latency percentiles (p50/p95/p99) and QPS as JSON.
+
+Two serving topologies:
+
+* ``--workers 0`` (default) — in-process: one QueryEngine, batched calls
+  from a single thread (the PR-1 behaviour).
+* ``--workers N`` — the multi-process layer (store/serving.py): N spawned
+  workers share the store's mmap'd segments, ``--clients`` concurrent
+  client threads submit requests, and each worker coalesces concurrent
+  requests into batched kernel launches within ``--batch-window-ms``.
+
+``--kernel`` picks the score-and-select backend for either topology:
+``numpy`` (jitted reference) or ``pallas`` (fused top-k gather kernel;
+interpreter mode off-TPU). Results are bit-identical between the two.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import tempfile
+import threading
 import time
 
 import numpy as np
 
 from repro.core.cooc import count_to_store
 from repro.data.corpus import _zipf_probs, synthetic_zipf_collection
-from repro.store import QueryEngine, Store
+from repro.store import CoocServer, QueryEngine, Store
 
 
 def _percentiles(lat_s: list[float]) -> dict:
@@ -31,6 +45,160 @@ def _percentiles(lat_s: list[float]) -> dict:
         "p50_ms": round(float(np.percentile(a, 50)), 3),
         "p95_ms": round(float(np.percentile(a, 95)), 3),
         "p99_ms": round(float(np.percentile(a, 99)), 3),
+    }
+
+
+def _build_or_open(
+    docs: int,
+    vocab: int,
+    method: str,
+    store_path: str | None,
+    budget_pairs: int,
+    seed: int,
+) -> tuple[Store, str, float]:
+    if store_path and Store.exists(store_path):
+        return Store.open(store_path), store_path, 0.0
+    store_path = store_path or os.path.join(
+        tempfile.mkdtemp(prefix="cooc_store_"), "store"
+    )
+    c = synthetic_zipf_collection(docs, vocab=vocab, mean_len=40, seed=seed)
+    t0 = time.perf_counter()
+    store, seg = count_to_store(method, c, store_path, memory_budget_pairs=budget_pairs)
+    build_s = time.perf_counter() - t0
+    print(
+        f"[build] {seg.nnz} pairs from {docs} docs via "
+        f"{seg.meta.get('source', method)} in {build_s:.2f}s "
+        f"({docs / build_s * 3600:.0f} docs/hour) -> {store_path}"
+    )
+    return store, store_path, build_s
+
+
+def _zipf_sampler(store: Store, seed: int):
+    """Zipf-skewed term draws: hot (high-df) terms get most of the traffic."""
+    V = store.vocab_size
+    probs = _zipf_probs(V, 1.0)
+    df_order = np.argsort(-store.df(), kind="stable")
+
+    def draw(rng, n):
+        return df_order[rng.choice(V, size=n, p=probs)]
+
+    return draw
+
+
+# ---------------------------------------------------------------- topologies
+def _serve_inprocess(
+    store: Store, draw, queries, batch, topk, score, kernel, seed
+) -> dict:
+    engine = QueryEngine(store, kernel=kernel)
+    rng = np.random.default_rng(seed + 1)
+    n_batches = max(queries // batch, 1)
+    engine.topk(draw(rng, batch), k=topk, score=score)  # jit warm-up
+    lat = []
+    for _ in range(n_batches):
+        terms = draw(rng, batch)
+        t0 = time.perf_counter()
+        engine.topk(terms, k=topk, score=score)
+        lat.append(time.perf_counter() - t0)
+    topk_stats = _percentiles(lat)
+    topk_qps = round(n_batches * batch / sum(lat))
+
+    lat_pc = []
+    for _ in range(n_batches):
+        pairs = np.stack([draw(rng, batch), draw(rng, batch)], axis=1)
+        t0 = time.perf_counter()
+        engine.pair_counts(pairs)
+        lat_pc.append(time.perf_counter() - t0)
+    return {
+        "topk_qps": topk_qps,
+        **{f"topk_{k}": v for k, v in topk_stats.items()},
+        "pair_qps": round(n_batches * batch / sum(lat_pc)),
+        **{f"pair_{k}": v for k, v in _percentiles(lat_pc).items()},
+        "row_cache": dict(engine.stats),
+    }
+
+
+def _serve_multiprocess(
+    store_path, draw, queries, batch, topk, score,
+    workers, clients, batch_window_ms, kernel, seed,
+) -> dict:
+    """Two phases (all-clients top-k, then all-clients pair lookups),
+    barrier-aligned so each workload's QPS is measured against its own
+    wall-clock — directly comparable to the in-process numbers."""
+    per_client = max(queries // (batch * clients), 1)
+    lat_topk: list[float] = []
+    lat_pair: list[float] = []
+    spans: dict[str, list[tuple[float, float]]] = {"topk": [], "pair": []}
+    errors: list[Exception] = []
+    lock = threading.Lock()
+    barrier = threading.Barrier(clients)
+
+    server = CoocServer(
+        store_path, workers=workers, batch_window_ms=batch_window_ms, kernel=kernel
+    ).start()
+
+    def client_loop(idx: int):
+        try:
+            client = server.client()
+            rng = np.random.default_rng(seed + 1 + idx)
+            client.topk(draw(rng, batch), k=topk, score=score)  # warm-up
+            client.pair_counts(
+                np.stack([draw(rng, batch), draw(rng, batch)], axis=1)
+            )
+
+            barrier.wait()
+            phase0 = time.perf_counter()
+            ltk = []
+            for _ in range(per_client):
+                terms = draw(rng, batch)
+                t0 = time.perf_counter()
+                client.topk(terms, k=topk, score=score)
+                ltk.append(time.perf_counter() - t0)
+            topk_span = (phase0, time.perf_counter())
+
+            barrier.wait()
+            phase0 = time.perf_counter()
+            lpc = []
+            for _ in range(per_client):
+                pairs = np.stack([draw(rng, batch), draw(rng, batch)], axis=1)
+                t0 = time.perf_counter()
+                client.pair_counts(pairs)
+                lpc.append(time.perf_counter() - t0)
+            pair_span = (phase0, time.perf_counter())
+
+            with lock:
+                lat_topk.extend(ltk)
+                lat_pair.extend(lpc)
+                spans["topk"].append(topk_span)
+                spans["pair"].append(pair_span)
+        except Exception as e:  # pragma: no cover - surfaced below
+            barrier.abort()
+            with lock:
+                errors.append(e)
+
+    threads = [
+        threading.Thread(target=client_loop, args=(i,)) for i in range(clients)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    sstats = server.stop()
+    if errors:
+        raise errors[0]
+
+    def phase_wall(name: str) -> float:
+        starts, ends = zip(*spans[name])
+        return max(ends) - min(starts)
+
+    total_topk = len(lat_topk) * batch
+    total_pair = len(lat_pair) * batch
+    return {
+        "clients": clients,
+        "topk_qps": round(total_topk / phase_wall("topk")),
+        **{f"topk_{k}": v for k, v in _percentiles(lat_topk).items()},
+        "pair_qps": round(total_pair / phase_wall("pair")),
+        **{f"pair_{k}": v for k, v in _percentiles(lat_pair).items()},
+        "serving": sstats,
     }
 
 
@@ -45,59 +213,28 @@ def serve(
     topk: int = 10,
     score: str = "count",
     seed: int = 0,
+    workers: int = 0,
+    clients: int = 2,
+    batch_window_ms: float = 2.0,
+    kernel: str = "numpy",
+    json_out: str | None = None,
 ) -> dict:
-    # ------------------------------------------------------------ build/open
-    if store_path and Store.exists(store_path):
-        store = Store.open(store_path)
-        build_s = 0.0
+    """Build/open a store and replay a Zipf workload; returns the stats dict
+    (and writes it as JSON to ``json_out`` if given)."""
+    store, store_path, build_s = _build_or_open(
+        docs, vocab, method, store_path, budget_pairs, seed
+    )
+    draw = _zipf_sampler(store, seed)
+
+    if workers <= 0:
+        served = _serve_inprocess(
+            store, draw, queries, batch, topk, score, kernel, seed
+        )
     else:
-        store_path = store_path or os.path.join(
-            tempfile.mkdtemp(prefix="cooc_store_"), "store"
+        served = _serve_multiprocess(
+            store_path, draw, queries, batch, topk, score,
+            workers, clients, batch_window_ms, kernel, seed,
         )
-        c = synthetic_zipf_collection(docs, vocab=vocab, mean_len=40, seed=seed)
-        t0 = time.perf_counter()
-        store, seg = count_to_store(
-            method, c, store_path, memory_budget_pairs=budget_pairs
-        )
-        build_s = time.perf_counter() - t0
-        print(
-            f"[build] {seg.nnz} pairs from {docs} docs via "
-            f"{seg.meta.get('source', method)} in {build_s:.2f}s "
-            f"({docs / build_s * 3600:.0f} docs/hour) -> {store_path}"
-        )
-
-    engine = QueryEngine(store)
-    V = store.vocab_size
-    rng = np.random.default_rng(seed + 1)
-    # Zipf-skewed term popularity: hot terms get most of the traffic
-    probs = _zipf_probs(V, 1.0)
-    df_order = np.argsort(-store.df(), kind="stable")
-
-    def draw_terms(n):
-        return df_order[rng.choice(V, size=n, p=probs)]
-
-    # ------------------------------------------------------------- top-k
-    n_batches = max(queries // batch, 1)
-    # warm up the jit cache before timing
-    engine.topk(draw_terms(batch), k=topk, score=score)
-    lat = []
-    for _ in range(n_batches):
-        terms = draw_terms(batch)
-        t0 = time.perf_counter()
-        engine.topk(terms, k=topk, score=score)
-        lat.append(time.perf_counter() - t0)
-    topk_stats = _percentiles(lat)
-    topk_qps = round(n_batches * batch / sum(lat))
-
-    # -------------------------------------------------------- pair counts
-    lat_pc = []
-    for _ in range(n_batches):
-        pairs = np.stack([draw_terms(batch), draw_terms(batch)], axis=1)
-        t0 = time.perf_counter()
-        engine.pair_counts(pairs)
-        lat_pc.append(time.perf_counter() - t0)
-    pair_stats = _percentiles(lat_pc)
-    pair_qps = round(n_batches * batch / sum(lat_pc))
 
     stats = {
         "store": store_path,
@@ -106,13 +243,14 @@ def serve(
         "build_s": round(build_s, 2),
         "score": score,
         "batch": batch,
-        "topk_qps": topk_qps,
-        **{f"topk_{k}": v for k, v in topk_stats.items()},
-        "pair_qps": pair_qps,
-        **{f"pair_{k}": v for k, v in pair_stats.items()},
-        "row_cache": dict(engine.stats),
+        "workers": workers,
+        "kernel": kernel,
+        **served,
     }
-    print(stats)
+    print(json.dumps(stats))
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(stats, f, indent=2)
     return stats
 
 
@@ -130,6 +268,23 @@ def main():
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--score", default="count", choices=["count", "pmi", "dice"])
+    ap.add_argument(
+        "--workers", type=int, default=0,
+        help="shared-mmap worker processes (0 = in-process engine)",
+    )
+    ap.add_argument(
+        "--clients", type=int, default=2,
+        help="concurrent client threads (only with --workers >= 1)",
+    )
+    ap.add_argument(
+        "--batch-window-ms", type=float, default=2.0,
+        help="micro-batch latency budget per worker",
+    )
+    ap.add_argument(
+        "--kernel", default="numpy", choices=["numpy", "pallas"],
+        help="score-and-select backend (bit-identical results)",
+    )
+    ap.add_argument("--json", default=None, help="also write stats JSON here")
     args = ap.parse_args()
     serve(
         args.docs,
@@ -141,6 +296,11 @@ def main():
         args.batch,
         args.topk,
         args.score,
+        workers=args.workers,
+        clients=args.clients,
+        batch_window_ms=args.batch_window_ms,
+        kernel=args.kernel,
+        json_out=args.json,
     )
 
 

@@ -3,13 +3,17 @@
 Layers: ``builder`` (SpillSink: budgeted spill-and-merge from any PairSink
 producer) → ``csr_store`` (immutable mmap CSR segments) → ``segments``
 (LSM manifest: incremental append, shard ingest, compaction) → ``query``
-(batched pair/top-k/PMI engine). See README §Store for the on-disk layout.
+(batched pair/top-k/PMI engine, numpy or Pallas kernel) → ``serving``
+(multi-process shared-mmap workers with cross-client micro-batching).
+See docs/architecture.md for the dataflow and docs/formats.md for the
+on-disk layout.
 """
 
 from repro.store.builder import SpillSink, merge_row_streams
 from repro.store.csr_store import CSRSegment, segment_from_pair_file, write_segment
 from repro.store.query import QueryEngine
 from repro.store.segments import Store
+from repro.store.serving import CoocClient, CoocServer, ServingConfig
 
 __all__ = [
     "SpillSink",
@@ -19,4 +23,7 @@ __all__ = [
     "write_segment",
     "QueryEngine",
     "Store",
+    "CoocServer",
+    "CoocClient",
+    "ServingConfig",
 ]

@@ -3,9 +3,18 @@
 Serving-side counterpart of the counting pipeline: pair-count point lookups,
 and top-k neighbour queries scored by raw count, PMI, or Dice. Neighbour
 rows are gathered from the mmap'd segments through a small LRU cache, padded
-into a rectangular batch, and scored/top-k'd in one JAX-jitted call — the
+into a rectangular batch, and scored/top-k'd in one batched launch — the
 same batched-gather discipline as the LM serving path (launch/serve.py),
 applied to retrieval statistics.
+
+Two interchangeable score-and-select backends (``kernel=``):
+
+* ``"numpy"``  — the jitted reference: score the tile with jnp ops and rank
+  with ``jax.lax.top_k`` (XLA, any backend);
+* ``"pallas"`` — the fused Pallas launch (kernels/topk_gather.py) that keeps
+  the tile in VMEM between scoring and selection; runs under the Pallas
+  interpreter off-TPU, and is asserted **bit-identical** to the reference on
+  every edge case (tests/test_topk_gather.py).
 
 Scores (df = document frequency, D = total documents):
     count  c(t, n)                        — exact integer top-k
@@ -25,11 +34,13 @@ import numpy as np
 from repro.store.segments import Store
 
 SCORES = ("count", "pmi", "dice")
+KERNELS = ("numpy", "pallas")
 
 
 @functools.partial(jax.jit, static_argnames=("score", "k"))
 def _score_topk(ids, cnts, df_t, df_n, num_docs, *, score: str, k: int):
-    """ids, cnts: (B, L) padded with id=-1 / cnt=0; df_t: (B,); df_n: (B, L).
+    """Reference scorer: ids, cnts: (B, L) padded with id=-1 / cnt=0;
+    df_t: (B,); df_n: (B, L).
 
     Returns (top_ids (B, k), top_scores (B, k)); padding slots score -inf
     (count: 0) and surface id -1."""
@@ -61,11 +72,47 @@ def _score_topk(ids, cnts, df_t, df_n, num_docs, *, score: str, k: int):
 
 
 class QueryEngine:
-    """Batched queries against a ``Store`` with an LRU row cache."""
+    """Batched queries against a :class:`~repro.store.segments.Store` with an
+    LRU row cache and a pluggable score-and-select kernel.
 
-    def __init__(self, store: Store, *, cache_rows: int = 4096):
+    The cache is the warm path: hot rows (Zipf head terms under real serving
+    traffic) are answered from memory; cold rows fall through to the shared
+    mmap'd segment files, touching only the pages a row needs. The cache
+    auto-invalidates when the store's manifest version changes (append,
+    ingest, compact).
+
+    Args:
+        store: an open :class:`Store`.
+        cache_rows: LRU capacity (merged neighbour rows).
+        kernel: ``"numpy"`` (jitted reference) or ``"pallas"`` (fused
+            gather/top-k kernel, bit-identical results).
+        interpret: Pallas interpreter mode; ``None`` auto-selects it off-TPU
+            so the pallas path runs (and is tested) on CPU CI.
+
+    Example::
+
+        store, _ = count_to_store("auto", collection, "/tmp/store")
+        eng = QueryEngine(store, kernel="pallas")
+        ids, scores = eng.topk([3, 17], k=5, score="pmi")
+        counts = eng.pair_counts(np.array([[3, 17]]))
+    """
+
+    def __init__(
+        self,
+        store: Store,
+        *,
+        cache_rows: int = 4096,
+        kernel: str = "numpy",
+        interpret: bool | None = None,
+    ):
+        if kernel not in KERNELS:
+            raise ValueError(f"unknown kernel {kernel!r}; have {KERNELS}")
         self.store = store
         self.cache_rows = cache_rows
+        self.kernel = kernel
+        self._interpret = (
+            jax.default_backend() != "tpu" if interpret is None else interpret
+        )
         self._cache: OrderedDict[int, tuple[np.ndarray, np.ndarray]] = OrderedDict()
         self._df = store.df()
         self._num_docs = max(store.num_docs, 1)
@@ -81,7 +128,12 @@ class QueryEngine:
             self._store_version = self.store.version
 
     def neighbours(self, t: int) -> tuple[np.ndarray, np.ndarray]:
-        """Merged (neighbour_ids, counts) of ``t``, LRU-cached."""
+        """Merged ``(neighbour_ids, counts)`` of term ``t``, LRU-cached.
+
+        Example::
+
+            ids, cnts = eng.neighbours(3)   # every co-occurring term of 3
+        """
         self._maybe_invalidate()
         hit = self._cache.get(t)
         if hit is not None:
@@ -97,8 +149,24 @@ class QueryEngine:
         return row
 
     # --------------------------------------------------------- queries
+    def _check_terms(self, terms: np.ndarray) -> None:
+        V = self.store.vocab_size
+        bad = terms[(terms < 0) | (terms >= V)]
+        if bad.size:
+            raise ValueError(
+                f"out-of-vocab term id(s) {sorted(set(bad.tolist()))[:5]}; "
+                f"store vocab_size is {V}"
+            )
+
     def pair_counts(self, pairs: np.ndarray) -> np.ndarray:
-        """Exact counts for a (B, 2) batch of unordered term pairs."""
+        """Exact counts for a ``(B, 2)`` batch of unordered term pairs.
+
+        Example::
+
+            eng.pair_counts(np.array([[3, 17], [5, 5]]))  # diagonal -> 0
+        """
+        pairs = np.asarray(pairs, dtype=np.int64)
+        self._check_terms(pairs.reshape(-1))
         return self.store.pair_counts(pairs)
 
     def topk(
@@ -106,12 +174,19 @@ class QueryEngine:
     ) -> tuple[np.ndarray, np.ndarray]:
         """Top-k neighbours for a batch of terms.
 
-        Returns (ids (B, k), scores (B, k)); rows with fewer than k
+        Returns ``(ids (B, k), scores (B, k))``; rows with fewer than k
         neighbours are padded with id -1 (score 0 for count, -inf else).
+        Results are identical for both kernels, including tie order (ties
+        rank the lower candidate-slot index first, like ``jax.lax.top_k``).
+
+        Example::
+
+            ids, scores = eng.topk([3, 17], k=5, score="count")
         """
         if score not in SCORES:
             raise ValueError(f"unknown score {score!r}; have {SCORES}")
         terms = np.atleast_1d(np.asarray(terms, dtype=np.int64))
+        self._check_terms(terms)
         rows = [self.neighbours(int(t)) for t in terms]
         L = max((len(r[0]) for r in rows), default=0)
         # jit cache friendliness: round the pad length up to a power of two
@@ -127,15 +202,25 @@ class QueryEngine:
         # every pmi candidate at +inf
         df_n = np.where(ids >= 0, np.maximum(self._df[np.maximum(ids, 0)], 1), 1)
         df_t = np.maximum(self._df[terms], 1)
-        top_ids, top_s = _score_topk(
-            jnp.asarray(ids),
-            jnp.asarray(cnts),
-            jnp.asarray(df_t),
-            jnp.asarray(df_n),
-            self._num_docs,
-            score=score,
-            k=min(k, L),
-        )
+        kk = min(k, L)
+        if self.kernel == "pallas":
+            from repro.kernels.topk_gather import topk_gather
+
+            top_ids, top_s = topk_gather(
+                ids, cnts, df_t, df_n,
+                num_docs=self._num_docs, score=score, k=kk,
+                interpret=self._interpret,
+            )
+        else:
+            top_ids, top_s = _score_topk(
+                jnp.asarray(ids),
+                jnp.asarray(cnts),
+                jnp.asarray(df_t),
+                jnp.asarray(df_n),
+                self._num_docs,
+                score=score,
+                k=kk,
+            )
         top_ids = np.asarray(top_ids)
         top_s = np.asarray(top_s)
         if k > top_ids.shape[1]:  # fewer candidates than k: pad out

@@ -1,0 +1,465 @@
+"""Multi-client co-occurrence serving: shared-mmap workers, micro-batched
+kernel launches.
+
+The query engine (store/query.py) already batches *within* one call; this
+layer batches *across clients*, the way a real serving deployment amortizes
+kernel launches over concurrent traffic:
+
+    clients ──▶ request queue ──▶ worker processes ──▶ response queue ─▶ router
+    (threads)   (shared, mp)      (N × Store + QueryEngine)  (mp)        (thread)
+
+* **Shared mmap** — every worker process opens the same immutable segment
+  files with ``np.memmap``; the OS page cache backs all mappings with one
+  physical copy, so N workers serve a 100 GB store with ~one store's worth
+  of resident pages. Nothing is pickled or copied per query but the request
+  and its (B, k) result.
+* **Micro-batching with a latency budget** — a worker takes the first
+  request off the shared queue, then keeps draining for at most
+  ``batch_window_ms`` (or until ``max_batch`` requests), coalesces
+  compatible requests — same ``(k, score)`` for top-k, all pair lookups
+  together — and executes each group as **one** batched kernel launch
+  (numpy reference or the Pallas top-k gather, per ``kernel=``).
+* **Warm/cold row routing** — each worker routes rows through its
+  QueryEngine's LRU cache: hot (Zipf-head) rows are served from memory,
+  cold rows fall through to the shared mmap. Per-worker hit/miss counters
+  are aggregated into the server's final stats.
+
+Example (driver-side; see launch/cooc_serve.py for the full workload)::
+
+    server = CoocServer(store_path, workers=4, batch_window_ms=2.0,
+                        kernel="pallas").start()
+    client = server.client()                 # one per client thread
+    ids, scores = client.topk([3, 17], k=10, score="pmi")
+    stats = server.stop()                    # {"requests": ..., "batches": ...}
+
+Workers are **spawned** (never forked): JAX runtimes do not survive a fork,
+and a spawned worker importing the store from disk is exactly the
+multi-process serving topology this layer exists to exercise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import multiprocessing as mp
+import os
+import queue
+import sys
+import threading
+import time
+
+import numpy as np
+
+_STOP = None  # queue sentinel; one per worker, re-enqueued if drained early
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Tuning knobs of one serving deployment (picklable: it crosses the
+    process boundary to every worker).
+
+    Example::
+
+        cfg = ServingConfig(workers=4, batch_window_ms=2.0, kernel="pallas")
+    """
+
+    workers: int = 2
+    batch_window_ms: float = 2.0      # micro-batch latency budget
+    max_batch: int = 64               # requests coalesced per launch, at most
+    kernel: str = "numpy"             # "numpy" | "pallas" (see store/query.py)
+    cache_rows: int = 4096            # per-worker LRU capacity
+
+    def __post_init__(self):
+        if self.workers < 1:
+            raise ValueError("workers must be >= 1")
+        if self.batch_window_ms < 0:
+            raise ValueError("batch_window_ms must be >= 0")
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+
+
+# ---------------------------------------------------------------------------
+# worker side
+# ---------------------------------------------------------------------------
+
+
+def _serve_batch(engine, batch, response_q, worker_id: int, stats: dict) -> None:
+    """Coalesce one micro-batch and answer it with as few kernel launches as
+    possible: one ``topk`` per distinct (k, score), one ``pair_counts`` for
+    all pair lookups. Invalid requests get error responses and do not poison
+    the rest of the batch."""
+    stats["batches"] += 1
+    stats["requests"] += len(batch)
+    stats["max_batch_requests"] = max(stats["max_batch_requests"], len(batch))
+    meta = {"worker": worker_id, "batch_requests": len(batch)}
+
+    topk_groups: dict[tuple[int, str], list] = {}
+    pair_reqs: list = []
+    for kind, cid, rid, *body in batch:
+        try:
+            if kind == "topk":
+                terms, k, score = body
+                terms = np.atleast_1d(np.asarray(terms, dtype=np.int64))
+                engine._check_terms(terms)  # the engine's canonical errors
+                topk_groups.setdefault((int(k), score), []).append(
+                    (cid, rid, terms)
+                )
+            elif kind == "pairs":
+                (pairs,) = body
+                pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+                engine._check_terms(pairs.reshape(-1))
+                pair_reqs.append((cid, rid, pairs))
+            else:
+                raise ValueError(f"unknown request kind {kind!r}")
+        except (ValueError, TypeError) as e:
+            response_q.put((cid, rid, False, ("value_error", str(e)), meta))
+
+    for (k, score), reqs in topk_groups.items():
+        all_terms = np.concatenate([t for _, _, t in reqs])
+        try:
+            ids, scores = engine.topk(all_terms, k=k, score=score)
+        except ValueError as e:  # e.g. unknown score name
+            for cid, rid, _ in reqs:
+                response_q.put((cid, rid, False, ("value_error", str(e)), meta))
+            continue
+        stats["topk_queries"] += len(all_terms)
+        stats["topk_launches"] += 1
+        off = 0
+        gmeta = {**meta, "coalesced_requests": len(reqs)}
+        for cid, rid, terms in reqs:
+            n = len(terms)
+            response_q.put(
+                (cid, rid, True, (ids[off : off + n], scores[off : off + n]), gmeta)
+            )
+            off += n
+
+    if pair_reqs:
+        all_pairs = np.concatenate([p for _, _, p in pair_reqs])
+        counts = engine.pair_counts(all_pairs)
+        stats["pair_queries"] += len(all_pairs)
+        stats["pair_launches"] += 1
+        off = 0
+        gmeta = {**meta, "coalesced_requests": len(pair_reqs)}
+        for cid, rid, pairs in pair_reqs:
+            n = len(pairs)
+            response_q.put((cid, rid, True, counts[off : off + n], gmeta))
+            off += n
+
+
+def _worker_main(
+    worker_id: int,
+    store_path: str,
+    cfg: ServingConfig,
+    request_q,
+    response_q,
+    stats_q,
+) -> None:
+    """One serving worker: open the store (mmap — pages shared with every
+    sibling via the OS page cache), then loop: block for a request, drain the
+    queue under the latency budget, serve the coalesced batch."""
+    from repro.store.query import QueryEngine
+    from repro.store.segments import Store
+
+    engine = QueryEngine(
+        Store.open(store_path), cache_rows=cfg.cache_rows, kernel=cfg.kernel
+    )
+    stats = {
+        "requests": 0,
+        "batches": 0,
+        "max_batch_requests": 0,
+        "topk_queries": 0,
+        "topk_launches": 0,
+        "pair_queries": 0,
+        "pair_launches": 0,
+    }
+    window_s = cfg.batch_window_ms / 1e3
+    stop = False
+    while not stop:
+        req = request_q.get()
+        if req is _STOP:
+            break
+        batch = [req]
+        deadline = time.perf_counter() + window_s
+        while len(batch) < cfg.max_batch:
+            timeout = deadline - time.perf_counter()
+            if timeout <= 0:
+                break
+            try:
+                nxt = request_q.get(timeout=timeout)
+            except queue.Empty:
+                break
+            if nxt is _STOP:
+                request_q.put(_STOP)  # hand the sentinel to a sibling
+                stop = True
+                break
+            batch.append(nxt)
+        _serve_batch(engine, batch, response_q, worker_id, stats)
+    stats.update(engine.stats)  # cache_hits / cache_misses
+    stats_q.put((worker_id, stats))
+
+
+# ---------------------------------------------------------------------------
+# server side
+# ---------------------------------------------------------------------------
+
+
+class ServingError(RuntimeError):
+    """A request failed inside a worker; carries the worker's message."""
+
+
+class CoocClient:
+    """A client handle bound to one :class:`CoocServer`.
+
+    Each concurrent client (thread) gets its own handle via
+    ``server.client()``; a handle's methods are blocking RPCs and may be
+    called from exactly one thread. ``last_meta`` exposes how the previous
+    request was served (worker id, micro-batch size, coalesced requests).
+
+    Example::
+
+        client = server.client()
+        ids, scores = client.topk([3, 17], k=10)
+        client.last_meta["batch_requests"]   # how many requests shared the batch
+    """
+
+    def __init__(self, server: "CoocServer", client_id: int, box: "queue.Queue"):
+        self._server = server
+        self._client_id = client_id
+        self._box = box
+        self._req_ids = itertools.count()
+        self._pending: dict[int, tuple] = {}
+        self.last_meta: dict = {}
+
+    def topk(self, terms, k: int = 10, *, score: str = "count", timeout: float = 60.0):
+        """Top-k neighbours, served through the shared worker pool. Returns
+        ``(ids (B, k), scores (B, k))`` exactly like ``QueryEngine.topk``."""
+        rid = next(self._req_ids)
+        self._server._submit(
+            ("topk", self._client_id, rid,
+             np.asarray(terms, dtype=np.int64), int(k), score)
+        )
+        return self._wait(rid, timeout)
+
+    def pair_counts(self, pairs, *, timeout: float = 60.0) -> np.ndarray:
+        """Exact counts for a (B, 2) pair batch, served remotely."""
+        rid = next(self._req_ids)
+        self._server._submit(
+            ("pairs", self._client_id, rid, np.asarray(pairs, dtype=np.int64))
+        )
+        return self._wait(rid, timeout)
+
+    def _wait(self, rid: int, timeout: float):
+        deadline = time.monotonic() + timeout
+        while rid not in self._pending:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(f"no response for request {rid} in {timeout}s")
+            try:
+                got_rid, ok, payload, meta = self._box.get(timeout=remaining)
+            except queue.Empty:
+                raise TimeoutError(
+                    f"no response for request {rid} in {timeout}s"
+                ) from None
+            self._pending[got_rid] = (ok, payload, meta)
+        ok, payload, meta = self._pending.pop(rid)
+        self.last_meta = meta
+        if not ok:
+            kind, message = payload
+            if kind == "value_error":
+                raise ValueError(message)  # mirror QueryEngine's local errors
+            raise ServingError(message)
+        return payload
+
+
+class CoocServer:
+    """Serve one on-disk store to many clients through shared-mmap worker
+    processes with cross-client micro-batching.
+
+    Lifecycle: ``start()`` spawns the workers and the response router;
+    ``client()`` mints per-thread client handles; ``stop()`` drains the
+    workers and returns aggregated serving stats. Usable as a context
+    manager.
+
+    Example::
+
+        with CoocServer(path, workers=4, batch_window_ms=2.0) as server:
+            ids, scores = server.client().topk([3], k=10)
+        # __exit__ stopped the workers; server.stats holds the aggregate
+    """
+
+    def __init__(
+        self,
+        store_path: str,
+        *,
+        workers: int = 2,
+        batch_window_ms: float = 2.0,
+        max_batch: int = 64,
+        kernel: str = "numpy",
+        cache_rows: int = 4096,
+    ):
+        from repro.store.query import KERNELS
+        from repro.store.segments import Store
+
+        if not Store.exists(store_path):
+            raise FileNotFoundError(f"no store at {store_path}")
+        if kernel not in KERNELS:
+            raise ValueError(f"unknown kernel {kernel!r}; have {KERNELS}")
+        self.store_path = store_path
+        self.config = ServingConfig(
+            workers=workers,
+            batch_window_ms=batch_window_ms,
+            max_batch=max_batch,
+            kernel=kernel,
+            cache_rows=cache_rows,
+        )
+        self.stats: dict = {}
+        self._procs: list = []
+        self._boxes: dict[int, queue.Queue] = {}
+        self._client_ids = itertools.count()
+        self._router = None
+        self._started = False
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "CoocServer":
+        if self._started:
+            raise RuntimeError("server already started")
+        ctx = mp.get_context("spawn")
+        self._request_q = ctx.Queue()
+        self._response_q = ctx.Queue()
+        self._stats_q = ctx.Queue()
+        # spawned children re-import repro.store.serving: make sure the
+        # package root is importable even when the parent relied on sys.path
+        # (e.g. a conftest) rather than PYTHONPATH
+        import repro
+
+        src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+        old_pp = os.environ.get("PYTHONPATH")
+        parts = (old_pp.split(os.pathsep) if old_pp else [])
+        if src_root not in parts:
+            os.environ["PYTHONPATH"] = os.pathsep.join([src_root] + parts)
+        # spawn re-RUNS the parent's __main__ in every child when the parent
+        # is a plain script (no module spec): an unguarded script would
+        # re-execute top-level code per worker (and trip the bootstrap
+        # guard), and an interactive/stdin parent has a phantom "<stdin>"
+        # path the child cannot open. Workers import everything from repro
+        # and need nothing from __main__, so hide the path for the duration
+        # of the spawns and skip the fix-up entirely.
+        main_mod = sys.modules.get("__main__")
+        hide_main = (
+            main_mod is not None
+            and getattr(main_mod, "__spec__", None) is None
+            and getattr(main_mod, "__file__", None) is not None
+        )
+        saved_main_file = main_mod.__file__ if hide_main else None
+        if hide_main:
+            del main_mod.__file__
+        try:
+            for i in range(self.config.workers):
+                p = ctx.Process(
+                    target=_worker_main,
+                    args=(
+                        i,
+                        self.store_path,
+                        self.config,
+                        self._request_q,
+                        self._response_q,
+                        self._stats_q,
+                    ),
+                    daemon=True,
+                )
+                p.start()
+                self._procs.append(p)
+        finally:
+            if old_pp is None:
+                os.environ.pop("PYTHONPATH", None)
+            else:
+                os.environ["PYTHONPATH"] = old_pp
+            if hide_main:
+                main_mod.__file__ = saved_main_file
+        self._router = threading.Thread(target=self._route, daemon=True)
+        self._router.start()
+        self._started = True
+        return self
+
+    def _route(self) -> None:
+        """Fan responses out of the single mp queue into per-client boxes."""
+        while True:
+            item = self._response_q.get()
+            if item is _STOP:
+                return
+            cid, rid, ok, payload, meta = item
+            box = self._boxes.get(cid)
+            if box is not None:
+                box.put((rid, ok, payload, meta))
+
+    def _submit(self, req) -> None:
+        if not self._started:
+            raise RuntimeError("server not started (call start())")
+        self._request_q.put(req)
+
+    def client(self) -> CoocClient:
+        """Mint a client handle (one per concurrent client thread)."""
+        cid = next(self._client_ids)
+        box: queue.Queue = queue.Queue()
+        self._boxes[cid] = box
+        return CoocClient(self, cid, box)
+
+    def stop(self, timeout: float = 120.0) -> dict:
+        """Drain the workers and return aggregated serving stats."""
+        if not self._started:
+            return self.stats
+        for _ in self._procs:
+            self._request_q.put(_STOP)
+        per_worker = {}
+        deadline = time.monotonic() + timeout
+        for _ in self._procs:
+            try:
+                wid, stats = self._stats_q.get(
+                    timeout=max(deadline - time.monotonic(), 0.1)
+                )
+            except queue.Empty:
+                dead = [
+                    (p.pid, p.exitcode)
+                    for p in self._procs
+                    if p.exitcode not in (0, None)
+                ]
+                for p in self._procs:
+                    p.terminate()
+                raise RuntimeError(
+                    f"serving worker(s) failed to report stats within "
+                    f"{timeout}s (dead workers: {dead or 'none'})"
+                ) from None
+            per_worker[wid] = stats
+        for p in self._procs:
+            p.join(timeout=max(deadline - time.monotonic(), 0.1))
+            if p.is_alive():  # pragma: no cover - workers already reported
+                p.terminate()
+        self._response_q.put(_STOP)
+        self._router.join(timeout=5)
+        self._started = False
+
+        agg = {
+            k: sum(w[k] for w in per_worker.values())
+            for k in next(iter(per_worker.values()))
+        } if per_worker else {}
+        if agg:
+            agg["max_batch_requests"] = max(
+                w["max_batch_requests"] for w in per_worker.values()
+            )
+            agg["avg_requests_per_batch"] = round(
+                agg["requests"] / max(agg["batches"], 1), 2
+            )
+        self.stats = {
+            "workers": self.config.workers,
+            "kernel": self.config.kernel,
+            "batch_window_ms": self.config.batch_window_ms,
+            **agg,
+            "per_worker": [per_worker[w] for w in sorted(per_worker)],
+        }
+        return self.stats
+
+    def __enter__(self) -> "CoocServer":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.stop()

@@ -1,0 +1,161 @@
+"""Multi-client serving layer: coalescing correctness (unit level, no
+processes) and the real thing — spawned shared-mmap workers serving
+concurrent client threads with results identical to a direct QueryEngine."""
+
+import queue
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.cooc import count_to_store
+from repro.core.oracle import brute_force_counts
+from repro.data.corpus import synthetic_zipf_collection
+from repro.store import CoocServer, QueryEngine, ServingConfig, Store
+from repro.store.serving import _serve_batch
+
+
+@pytest.fixture(scope="module")
+def coll():
+    return synthetic_zipf_collection(150, vocab=128, mean_len=12, seed=7)
+
+
+@pytest.fixture(scope="module")
+def store_path(coll, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("serving") / "store")
+    count_to_store("list-scan", coll, path)
+    return path
+
+
+# ----------------------------------------------------------- config
+def test_serving_config_validation():
+    with pytest.raises(ValueError, match="workers"):
+        ServingConfig(workers=0)
+    with pytest.raises(ValueError, match="max_batch"):
+        ServingConfig(max_batch=0)
+    with pytest.raises(ValueError, match="batch_window_ms"):
+        ServingConfig(batch_window_ms=-1.0)
+
+
+# ------------------------------------------------- batch coalescing (unit)
+def test_serve_batch_coalesces_and_splits(store_path, coll):
+    """One micro-batch with mixed requests: per-(k, score) topk groups and
+    all pair lookups each become a single launch, and every client gets
+    exactly its slice back."""
+    engine = QueryEngine(Store.open(store_path))
+    out = queue.Queue()
+    stats = {k: 0 for k in (
+        "requests", "batches", "max_batch_requests",
+        "topk_queries", "topk_launches", "pair_queries", "pair_launches",
+    )}
+    batch = [
+        ("topk", 0, 0, np.array([1, 2]), 4, "count"),
+        ("topk", 1, 0, np.array([3]), 4, "count"),      # coalesces with above
+        ("topk", 0, 1, np.array([5]), 2, "pmi"),        # different group
+        ("pairs", 1, 1, np.array([[1, 2], [3, 4]])),
+        ("pairs", 0, 2, np.array([[5, 6]])),
+        ("topk", 1, 2, np.array([999]), 4, "count"),    # out-of-vocab -> error
+    ]
+    _serve_batch(engine, batch, out, worker_id=0, stats=stats)
+    assert stats["topk_launches"] == 2          # (4, count) + (2, pmi)
+    assert stats["pair_launches"] == 1
+    assert stats["topk_queries"] == 4 and stats["pair_queries"] == 3
+    assert stats["requests"] == 6 and stats["batches"] == 1
+
+    got = {}
+    while not out.empty():
+        cid, rid, ok, payload, meta = out.get()
+        got[(cid, rid)] = (ok, payload, meta)
+    assert len(got) == 6
+    err_kind, err_msg = got[(1, 2)][1]
+    assert got[(1, 2)][0] is False and err_kind == "value_error"
+    assert "out-of-vocab" in err_msg
+
+    ref = QueryEngine(engine.store)
+    ids, scores = ref.topk(np.array([1, 2, 3]), k=4)
+    ok, (ids01, s01), meta = got[(0, 0)]
+    assert ok and meta["coalesced_requests"] == 2
+    np.testing.assert_array_equal(ids01, ids[:2])
+    ok, (ids10, _), _ = got[(1, 0)]
+    np.testing.assert_array_equal(ids10, ids[2:])
+    np.testing.assert_array_equal(
+        got[(1, 1)][1], ref.pair_counts(np.array([[1, 2], [3, 4]]))
+    )
+    np.testing.assert_array_equal(
+        got[(0, 2)][1], ref.pair_counts(np.array([[5, 6]]))
+    )
+
+
+# --------------------------------------------------- end-to-end (processes)
+def test_server_multi_client_matches_engine(store_path, coll):
+    """>1 client served against shared mmap segments with batched execution:
+    every served result equals the direct QueryEngine answer."""
+    oracle = brute_force_counts(coll)
+    sym = oracle + oracle.T
+    ref = QueryEngine(Store.open(store_path))
+    n_clients, reqs_per_client = 3, 6
+    errors, metas = [], []
+
+    with CoocServer(store_path, workers=2, batch_window_ms=5.0) as server:
+        def client_loop(idx):
+            try:
+                client = server.client()
+                rng = np.random.default_rng(100 + idx)
+                for _ in range(reqs_per_client):
+                    terms = rng.integers(0, coll.vocab_size, size=8)
+                    ids, scores = client.topk(terms, k=5)
+                    rids, rscores = ref.topk(terms, k=5)
+                    np.testing.assert_array_equal(ids, rids)
+                    np.testing.assert_array_equal(scores, rscores)
+                    for b, t in enumerate(terms):  # and against the oracle
+                        for i, s in zip(ids[b], scores[b]):
+                            if i >= 0:
+                                assert sym[t][i] == s
+                    metas.append(client.last_meta)
+                    pairs = rng.integers(0, coll.vocab_size, size=(6, 2))
+                    np.testing.assert_array_equal(
+                        client.pair_counts(pairs), ref.pair_counts(pairs)
+                    )
+            except Exception as e:  # pragma: no cover - surfaced below
+                errors.append(e)
+
+        threads = [
+            threading.Thread(target=client_loop, args=(i,))
+            for i in range(n_clients)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=180)
+    assert not errors, errors
+
+    stats = server.stats
+    assert stats["workers"] == 2
+    assert stats["requests"] == n_clients * reqs_per_client * 2
+    assert stats["topk_queries"] == n_clients * reqs_per_client * 8
+    assert stats["pair_queries"] == n_clients * reqs_per_client * 6
+    assert stats["batches"] >= 1
+    assert stats["cache_hits"] + stats["cache_misses"] > 0
+    assert len(stats["per_worker"]) == 2
+    assert metas and all("worker" in m for m in metas)
+
+
+def test_server_error_propagation_and_restart_guard(store_path):
+    with CoocServer(store_path, workers=1, batch_window_ms=0.0) as server:
+        client = server.client()
+        with pytest.raises(ValueError, match="out-of-vocab"):
+            client.topk([10_000], k=3)
+        with pytest.raises(ValueError, match="out-of-vocab"):
+            client.pair_counts(np.array([[0, -2]]))
+        # healthy after an error response
+        ids, _ = client.topk([1], k=3)
+        assert ids.shape == (1, 3)
+        with pytest.raises(RuntimeError, match="already started"):
+            server.start()
+
+
+def test_server_rejects_bad_args(store_path, tmp_path):
+    with pytest.raises(FileNotFoundError):
+        CoocServer(str(tmp_path / "nope"))
+    with pytest.raises(ValueError, match="unknown kernel"):
+        CoocServer(store_path, kernel="cuda")
