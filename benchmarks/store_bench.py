@@ -12,9 +12,19 @@ Two entry points:
   the multi-process shared-mmap serving layer, reporting p50/p99 latency and
   QPS per topology as a JSON document (``BENCH_serving.json`` in CI — the
   first entries of the perf trajectory).
+* ``run_routing()`` — the hot-term-routing benchmark (ISSUE 4): the same
+  Zipf-skewed workload served by ``workers`` unrouted (shared queue, every
+  worker caches the same hot rows) vs routed (terms hashed to their cache
+  owner, caches partition the vocabulary), with a per-worker LRU
+  deliberately smaller than the hot set. Emits ``BENCH_routing.json``
+  (aggregate cache hit rate, p95 latency, QPS per topology) and **asserts**
+  the routed hit rate is strictly higher — the perf trajectory's first
+  routed-serving entries double as a regression gate.
 
     PYTHONPATH=src:. python benchmarks/store_bench.py \
         --json BENCH_serving.json --docs 4000 --workers 2 --clients 3
+    PYTHONPATH=src:. python benchmarks/store_bench.py \
+        --routing-json BENCH_routing.json --workers 4 --clients 4
 """
 
 from __future__ import annotations
@@ -184,6 +194,80 @@ def run_serving(
     return out
 
 
+# ---------------------------------------------------------------------------
+# routing benchmark (routed vs unrouted cache partitioning JSON artifact)
+# ---------------------------------------------------------------------------
+
+
+def run_routing(
+    json_path: str | None = None,
+    *,
+    docs: int = 3_000,
+    vocab: int = 2_048,
+    workers: int = 4,
+    clients: int = 4,
+    queries: int = 2_048,
+    batch: int = 32,
+    topk: int = TOPK,
+    cache_rows: int = 64,
+    batch_window_ms: float = 2.0,
+    kernel: str = "numpy",
+    seed: int = 5,
+) -> dict:
+    """Routed vs unrouted serving over one store and one Zipf workload.
+
+    ``cache_rows`` is deliberately far below the Zipf hot set: unrouted,
+    every worker's LRU churns through the same global head; routed, the
+    planner hashes each term to its cache owner so the N caches hold N
+    disjoint vocabulary slices (≈ N × the effective capacity). The emitted
+    JSON records aggregate cache hit rate, p95 latency, and QPS for both
+    topologies, and this function asserts the routed hit rate is strictly
+    higher — CI fails if routing ever stops paying for itself."""
+    from repro.launch.cooc_serve import serve
+
+    store_path = os.path.join(tempfile.mkdtemp(prefix="routing_bench_"), "store")
+    runs = {}
+    for name, routing in (("unrouted", False), ("routed", True)):
+        stats = serve(
+            docs=docs, vocab=vocab, store_path=store_path, queries=queries,
+            batch=batch, topk=topk, workers=workers, clients=clients,
+            batch_window_ms=batch_window_ms, kernel=kernel,
+            routing=routing, cache_rows=cache_rows, seed=seed,
+        )
+        s = stats["serving"]
+        runs[name] = {
+            "cache_hit_rate": s["cache_hit_rate"],
+            "cache_hits": s["cache_hits"],
+            "cache_misses": s["cache_misses"],
+            "per_worker_hit_rate": [w["cache_hit_rate"] for w in s["per_worker"]],
+            "topk_qps": stats["topk_qps"],
+            "topk_p95_ms": stats["topk_p95_ms"],
+            "pair_qps": stats["pair_qps"],
+        }
+    assert runs["routed"]["cache_hit_rate"] > runs["unrouted"]["cache_hit_rate"], (
+        "hot-term routing did not improve the aggregate cache hit rate: "
+        f"{runs['routed']['cache_hit_rate']} vs {runs['unrouted']['cache_hit_rate']}"
+    )
+    out = {
+        "suite": "routing",
+        "config": {
+            "docs": docs, "vocab": vocab, "queries": queries, "batch": batch,
+            "topk": topk, "workers": workers, "clients": clients,
+            "cache_rows": cache_rows, "batch_window_ms": batch_window_ms,
+            "kernel": kernel,
+        },
+        **runs,
+        "hit_rate_gain": round(
+            runs["routed"]["cache_hit_rate"] - runs["unrouted"]["cache_hit_rate"], 4
+        ),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[routing bench] wrote {json_path}")
+    return out
+
+
 if __name__ == "__main__":
     # The CLI is the serving benchmark; the CSV oracle-gate suite runs via
     # `benchmarks/run.py store` (so serving flags can never be silently
@@ -191,7 +275,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=run_serving.__doc__)
     ap.add_argument(
         "--json", default=None,
-        help="write the JSON here (default: print to stdout)",
+        help="write the serving JSON here (default: print to stdout)",
+    )
+    ap.add_argument(
+        "--routing-json", default=None,
+        help="run the routed-vs-unrouted benchmark and write its JSON here "
+             "(skips the plain serving benchmark unless --json is also given)",
     )
     ap.add_argument("--docs", type=int, default=4_000)
     ap.add_argument("--vocab", type=int, default=1_024)
@@ -200,12 +289,22 @@ if __name__ == "__main__":
     ap.add_argument("--queries", type=int, default=768)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--batch-window-ms", type=float, default=2.0)
+    ap.add_argument("--cache-rows", type=int, default=64,
+                    help="per-worker LRU capacity for the routing benchmark")
     ap.add_argument("--kernel", default="numpy", choices=["numpy", "pallas"])
     args = ap.parse_args()
-    result = run_serving(
-        args.json, docs=args.docs, vocab=args.vocab, workers=args.workers,
-        clients=args.clients, queries=args.queries, batch=args.batch,
-        batch_window_ms=args.batch_window_ms, kernel=args.kernel,
-    )
-    if not args.json:
-        print(json.dumps(result, indent=2))
+    if args.routing_json:
+        result = run_routing(
+            args.routing_json, docs=args.docs, vocab=args.vocab,
+            workers=args.workers, clients=args.clients,
+            queries=args.queries, batch=args.batch, cache_rows=args.cache_rows,
+            batch_window_ms=args.batch_window_ms, kernel=args.kernel,
+        )
+    if args.json or not args.routing_json:
+        result = run_serving(
+            args.json, docs=args.docs, vocab=args.vocab, workers=args.workers,
+            clients=args.clients, queries=args.queries, batch=args.batch,
+            batch_window_ms=args.batch_window_ms, kernel=args.kernel,
+        )
+        if not args.json:
+            print(json.dumps(result, indent=2))

@@ -3,9 +3,11 @@
     PYTHONPATH=src python examples/query_store.py
 
 Covers the full store lifecycle: build through a memory-budgeted SpillSink,
-point pair lookups, batched top-k under three scores (numpy and Pallas
-kernels — identical results), an exact incremental append of new documents,
-compaction back to one segment, and multi-process serving over shared mmaps.
+typed query requests (one request batch -> coalesced kernel launches),
+streaming top-k, point pair lookups, batched top-k under three scores
+(numpy and Pallas kernels — identical results), an exact incremental append
+of new documents, compaction back to one segment, and multi-process serving
+over shared mmaps with hot-term routing.
 """
 
 import os
@@ -15,7 +17,13 @@ import numpy as np
 
 from repro.core.cooc import count_to_store
 from repro.data.corpus import synthetic_zipf_collection
-from repro.store import QueryEngine, Store
+from repro.store import (
+    NeighboursRequest,
+    PairCountsRequest,
+    QueryEngine,
+    Store,
+    TopKRequest,
+)
 
 store_path = os.path.join(tempfile.mkdtemp(prefix="cooc_example_"), "store")
 
@@ -33,13 +41,35 @@ print(f"built {store_path}: {seg.nnz} distinct pairs from {c.num_docs} docs "
 # 2. Point lookups: how often do terms 0 and 1 co-occur?
 print("pair_count(0, 1) =", store.pair_count(0, 1))
 
-# 3. Batched top-k neighbours under raw count, PMI, and Dice.
+# 3. Typed query requests (store/requests.py): validation happens at
+#    construction, and one execute() call answers a heterogeneous batch with
+#    as few kernel launches as possible — both top-k requests share one
+#    launch because they agree on (k, score).
 engine = QueryEngine(store)
 terms = np.array([0, 1, 2, 3])
+(ids, scores), (ids2, _), counts, (nbr_ids, nbr_counts) = engine.execute([
+    TopKRequest(terms, k=5, score="count"),
+    TopKRequest([7, 8], k=5, score="count"),      # coalesces with the above
+    PairCountsRequest(np.array([[0, 1], [2, 3]])),
+    NeighboursRequest(0),
+])
+print(f"top-5 by count: term 0 ->",
+      list(zip(ids[0].tolist(), scores[0].tolist())),
+      f"| term 0 has {len(nbr_ids)} neighbours")
+
+# ... the classic methods remain as byte-identical shims over that path:
 for score in ["count", "pmi", "dice"]:
-    ids, scores = engine.topk(terms, k=5, score=score)
+    sids, sscores = engine.topk(terms, k=5, score=score)   # shim-based call
     print(f"top-5 by {score}: term 0 ->",
-          list(zip(ids[0].tolist(), np.round(scores[0], 3).tolist())))
+          list(zip(sids[0].tolist(), np.round(sscores[0], 3).tolist())))
+
+# 3b. Streaming top-k: large-k responses arrive as score-ordered chunks;
+#     concatenating the chunks reproduces the monolithic result exactly.
+chunks = list(engine.topk_stream(terms, k=50, chunk=16))
+full_ids, full_scores = engine.topk(terms, k=50)
+assert np.array_equal(np.concatenate([c[0] for c in chunks], axis=1), full_ids)
+assert np.array_equal(np.concatenate([c[1] for c in chunks], axis=1), full_scores)
+print(f"streamed k=50 in {len(chunks)} chunks == monolithic top-k")
 
 # 4. Exact incremental append: new documents arrive, only a new segment is
 #    written; queries now reflect the union of both batches.
@@ -66,15 +96,23 @@ ids, scores = engine.topk(terms, k=5)
 assert np.array_equal(pids, ids) and np.array_equal(pscores, scores)
 print("pallas kernel: identical top-k for", len(terms), "terms")
 
-# 8. Multi-client serving: worker processes share the segment mmaps through
-#    the OS page cache and coalesce concurrent requests into batched kernel
-#    launches (store/serving.py; see docs/architecture.md).
+# 8. Multi-client serving with hot-term routing: worker processes share the
+#    segment mmaps through the OS page cache; the same request objects are
+#    the wire protocol, and routing hashes each term to the worker whose
+#    LRU cache owns its row (store/serving.py; see docs/serving.md).
 from repro.store import CoocServer
 
-with CoocServer(store_path, workers=2, batch_window_ms=2.0) as server:
+ids, scores = engine.topk(terms, k=5)
+full_ids, _ = engine.topk(terms, k=50)
+with CoocServer(store_path, workers=2, batch_window_ms=2.0,
+                routing=True) as server:
     client = server.client()
     sids, sscores = client.topk(terms, k=5)
     assert np.array_equal(sids, ids) and np.array_equal(sscores, scores)
-print("served identically by", server.stats["workers"], "shared-mmap workers;",
-      server.stats["requests"], "request(s) in", server.stats["batches"],
-      "micro-batch(es)")
+    schunks = list(client.topk_stream(terms, k=50, chunk=16))
+    assert np.array_equal(
+        np.concatenate([c[0] for c in schunks], axis=1), full_ids)
+print("served identically by", server.stats["workers"],
+      "routed shared-mmap workers;", server.stats["requests"],
+      "request(s) in", server.stats["batches"], "micro-batch(es);",
+      "cache hit rate", server.stats["cache_hit_rate"])

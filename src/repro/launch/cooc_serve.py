@@ -15,8 +15,14 @@ Two serving topologies:
   from a single thread (the PR-1 behaviour).
 * ``--workers N`` — the multi-process layer (store/serving.py): N spawned
   workers share the store's mmap'd segments, ``--clients`` concurrent
-  client threads submit requests, and each worker coalesces concurrent
-  requests into batched kernel launches within ``--batch-window-ms``.
+  client threads submit typed requests (store/requests.py — the wire
+  protocol), and each worker coalesces concurrent requests into batched
+  kernel launches within ``--batch-window-ms``.
+
+``--routing`` enables hot-term routing: the client-side QueryPlanner hashes
+each term to the worker that owns its cache row, so per-worker LRU caches
+partition the vocabulary instead of duplicating the Zipf head (the stats
+JSON reports the aggregate and per-worker ``cache_hit_rate``).
 
 ``--kernel`` picks the score-and-select backend for either topology:
 ``numpy`` (jitted reference) or ``pallas`` (fused top-k gather kernel;
@@ -87,9 +93,10 @@ def _zipf_sampler(store: Store, seed: int):
 
 # ---------------------------------------------------------------- topologies
 def _serve_inprocess(
-    store: Store, draw, queries, batch, topk, score, kernel, seed
+    store: Store, draw, queries, batch, topk, score, kernel, seed,
+    cache_rows=4096,
 ) -> dict:
-    engine = QueryEngine(store, kernel=kernel)
+    engine = QueryEngine(store, kernel=kernel, cache_rows=cache_rows)
     rng = np.random.default_rng(seed + 1)
     n_batches = max(queries // batch, 1)
     engine.topk(draw(rng, batch), k=topk, score=score)  # jit warm-up
@@ -120,6 +127,7 @@ def _serve_inprocess(
 def _serve_multiprocess(
     store_path, draw, queries, batch, topk, score,
     workers, clients, batch_window_ms, kernel, seed,
+    routing=False, cache_rows=4096,
 ) -> dict:
     """Two phases (all-clients top-k, then all-clients pair lookups),
     barrier-aligned so each workload's QPS is measured against its own
@@ -133,7 +141,8 @@ def _serve_multiprocess(
     barrier = threading.Barrier(clients)
 
     server = CoocServer(
-        store_path, workers=workers, batch_window_ms=batch_window_ms, kernel=kernel
+        store_path, workers=workers, batch_window_ms=batch_window_ms,
+        kernel=kernel, routing=routing, cache_rows=cache_rows,
     ).start()
 
     def client_loop(idx: int):
@@ -217,6 +226,8 @@ def serve(
     clients: int = 2,
     batch_window_ms: float = 2.0,
     kernel: str = "numpy",
+    routing: bool = False,
+    cache_rows: int = 4096,
     json_out: str | None = None,
 ) -> dict:
     """Build/open a store and replay a Zipf workload; returns the stats dict
@@ -228,12 +239,14 @@ def serve(
 
     if workers <= 0:
         served = _serve_inprocess(
-            store, draw, queries, batch, topk, score, kernel, seed
+            store, draw, queries, batch, topk, score, kernel, seed,
+            cache_rows=cache_rows,
         )
     else:
         served = _serve_multiprocess(
             store_path, draw, queries, batch, topk, score,
             workers, clients, batch_window_ms, kernel, seed,
+            routing=routing, cache_rows=cache_rows,
         )
 
     stats = {
@@ -245,6 +258,7 @@ def serve(
         "batch": batch,
         "workers": workers,
         "kernel": kernel,
+        "routing": bool(routing and workers > 1),
         **served,
     }
     print(json.dumps(stats))
@@ -284,6 +298,15 @@ def main():
         "--kernel", default="numpy", choices=["numpy", "pallas"],
         help="score-and-select backend (bit-identical results)",
     )
+    ap.add_argument(
+        "--routing", action="store_true",
+        help="hot-term routing: hash terms to workers so per-worker LRU "
+             "caches partition the vocabulary (only with --workers >= 2)",
+    )
+    ap.add_argument(
+        "--cache-rows", type=int, default=4096,
+        help="per-engine/per-worker LRU row-cache capacity",
+    )
     ap.add_argument("--json", default=None, help="also write stats JSON here")
     args = ap.parse_args()
     serve(
@@ -300,6 +323,8 @@ def main():
         clients=args.clients,
         batch_window_ms=args.batch_window_ms,
         kernel=args.kernel,
+        routing=args.routing,
+        cache_rows=args.cache_rows,
         json_out=args.json,
     )
 

@@ -2,16 +2,26 @@
 
 Layers: ``builder`` (SpillSink: budgeted spill-and-merge from any PairSink
 producer) → ``csr_store`` (immutable mmap CSR segments) → ``segments``
-(LSM manifest: incremental append, shard ingest, compaction) → ``query``
-(batched pair/top-k/PMI engine, numpy or Pallas kernel) → ``serving``
-(multi-process shared-mmap workers with cross-client micro-batching).
-See docs/architecture.md for the dataflow and docs/formats.md for the
-on-disk layout.
+(LSM manifest: incremental append, shard ingest, compaction) → ``requests``
+(typed query requests, QueryPlanner routing/coalescing, one execution
+path) → ``query`` (batched pair/top-k/PMI engine, numpy or Pallas kernel)
+→ ``serving`` (multi-process shared-mmap workers with cross-client
+micro-batching, hot-term routing, and streaming top-k).
+See docs/architecture.md for the dataflow, docs/formats.md for the
+on-disk layout, and docs/serving.md for the query API + wire protocol.
 """
 
 from repro.store.builder import SpillSink, merge_row_streams
 from repro.store.csr_store import CSRSegment, segment_from_pair_file, write_segment
 from repro.store.query import QueryEngine
+from repro.store.requests import (
+    NeighboursRequest,
+    PairCountsRequest,
+    QueryPlan,
+    QueryPlanner,
+    TopKRequest,
+    route_term,
+)
 from repro.store.segments import Store
 from repro.store.serving import CoocClient, CoocServer, ServingConfig
 
@@ -23,6 +33,12 @@ __all__ = [
     "write_segment",
     "QueryEngine",
     "Store",
+    "TopKRequest",
+    "PairCountsRequest",
+    "NeighboursRequest",
+    "QueryPlan",
+    "QueryPlanner",
+    "route_term",
     "CoocServer",
     "CoocClient",
     "ServingConfig",

@@ -7,6 +7,13 @@ into a rectangular batch, and scored/top-k'd in one batched launch — the
 same batched-gather discipline as the LM serving path (launch/serve.py),
 applied to retrieval statistics.
 
+Queries are typed request objects (store/requests.py): ``execute()`` takes a
+batch of ``TopKRequest | PairCountsRequest | NeighboursRequest``, coalesces
+compatible requests into single launches, and answers them through the same
+``execute_groups`` path the multi-process serving workers use. The classic
+``topk`` / ``pair_counts`` / ``neighbours`` methods remain as thin
+byte-identical shims over that path.
+
 Two interchangeable score-and-select backends (``kernel=``):
 
 * ``"numpy"``  — the jitted reference: score the tile with jnp ops and rank
@@ -31,10 +38,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.store.requests import (
+    KERNELS,
+    SCORES,
+    NeighboursRequest,
+    PairCountsRequest,
+    TopKRequest,
+    check_request_types,
+    coalesce,
+    execute_groups,
+)
 from repro.store.segments import Store
-
-SCORES = ("count", "pmi", "dice")
-KERNELS = ("numpy", "pallas")
 
 
 @functools.partial(jax.jit, static_argnames=("score", "k"))
@@ -127,13 +141,9 @@ class QueryEngine:
             self._num_docs = max(self.store.num_docs, 1)
             self._store_version = self.store.version
 
-    def neighbours(self, t: int) -> tuple[np.ndarray, np.ndarray]:
-        """Merged ``(neighbour_ids, counts)`` of term ``t``, LRU-cached.
-
-        Example::
-
-            ids, cnts = eng.neighbours(3)   # every co-occurring term of 3
-        """
+    def _row(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        """Cached merged row of term ``t`` (no out-of-vocab validation —
+        callers go through ``_check_terms`` first)."""
         self._maybe_invalidate()
         hit = self._cache.get(t)
         if hit is not None:
@@ -158,21 +168,71 @@ class QueryEngine:
                 f"store vocab_size is {V}"
             )
 
+    def execute(self, requests) -> list:
+        """Answer a batch of typed requests (store/requests.py) with as few
+        kernel launches as possible — one ``topk`` launch per distinct
+        ``(k, score)``, all pair lookups together. Returns one result per
+        request, in order: ``(ids, scores)`` for top-k, a count vector for
+        pairs, ``(ids, counts)`` for neighbours, and an **iterator of
+        score-ordered chunks** for streamed top-k (``chunk=`` set).
+
+        An invalid request (e.g. out-of-vocab term) raises the engine's
+        canonical ``ValueError`` for the first offending request.
+
+        Example::
+
+            reqs = [TopKRequest([3, 17], k=5, score="pmi"),
+                    PairCountsRequest(np.array([[3, 17]]))]
+            (ids, scores), counts = eng.execute(reqs)
+        """
+        reqs = list(requests)
+        check_request_types(reqs)
+        results: dict[int, list] = {}
+        errors: dict[int, str] = {}
+
+        def emit(tag, ok, payload, *, seq=0, last=True, extra=None):
+            if ok:
+                results.setdefault(tag, []).append(payload)
+            else:
+                errors.setdefault(tag, payload[1])
+
+        execute_groups(self, coalesce(list(enumerate(reqs))), emit)
+        if errors:
+            raise ValueError(errors[min(errors)])
+        out = []
+        for i, req in enumerate(reqs):
+            if isinstance(req, TopKRequest) and req.chunk is not None:
+                out.append(iter(results[i]))
+            else:
+                out.append(results[i][0])
+        return out
+
+    def neighbours(self, t: int) -> tuple[np.ndarray, np.ndarray]:
+        """Merged ``(neighbour_ids, counts)`` of term ``t``, LRU-cached.
+        Shim over :class:`NeighboursRequest` (out-of-vocab ids raise the
+        same ``ValueError`` as every other query).
+
+        Example::
+
+            ids, cnts = eng.neighbours(3)   # every co-occurring term of 3
+        """
+        return self.execute([NeighboursRequest(t)])[0]
+
     def pair_counts(self, pairs: np.ndarray) -> np.ndarray:
         """Exact counts for a ``(B, 2)`` batch of unordered term pairs.
+        Shim over :class:`PairCountsRequest`.
 
         Example::
 
             eng.pair_counts(np.array([[3, 17], [5, 5]]))  # diagonal -> 0
         """
-        pairs = np.asarray(pairs, dtype=np.int64)
-        self._check_terms(pairs.reshape(-1))
-        return self.store.pair_counts(pairs)
+        return self.execute([PairCountsRequest(pairs)])[0]
 
     def topk(
         self, terms, k: int = 10, *, score: str = "count"
     ) -> tuple[np.ndarray, np.ndarray]:
-        """Top-k neighbours for a batch of terms.
+        """Top-k neighbours for a batch of terms. Shim over
+        :class:`TopKRequest` — byte-identical to the request path.
 
         Returns ``(ids (B, k), scores (B, k))``; rows with fewer than k
         neighbours are padded with id -1 (score 0 for count, -inf else).
@@ -183,11 +243,29 @@ class QueryEngine:
 
             ids, scores = eng.topk([3, 17], k=5, score="count")
         """
-        if score not in SCORES:
-            raise ValueError(f"unknown score {score!r}; have {SCORES}")
-        terms = np.atleast_1d(np.asarray(terms, dtype=np.int64))
-        self._check_terms(terms)
-        rows = [self.neighbours(int(t)) for t in terms]
+        return self.execute([TopKRequest(terms, k=k, score=score)])[0]
+
+    def topk_stream(
+        self, terms, k: int, *, score: str = "count", chunk: int = 1024
+    ):
+        """Streaming top-k: an iterator of score-ordered ``(ids, scores)``
+        column blocks of width ≤ ``chunk``. Concatenating the chunks along
+        axis 1 equals ``topk(terms, k, score=score)`` exactly — chunking is
+        a transport feature (serving moves large-k responses across the
+        process boundary block by block), not an approximation.
+
+        Example::
+
+            chunks = list(eng.topk_stream([3], k=5000, chunk=512))
+            ids = np.concatenate([c[0] for c in chunks], axis=1)  # (1, 5000)
+        """
+        return self.execute([TopKRequest(terms, k=k, score=score, chunk=chunk)])[0]
+
+    def _topk_batch(
+        self, terms: np.ndarray, k: int, score: str
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """The batched gather + score + select launch (validated inputs)."""
+        rows = [self._row(int(t)) for t in terms]
         L = max((len(r[0]) for r in rows), default=0)
         # jit cache friendliness: round the pad length up to a power of two
         L = max(8, 1 << (L - 1).bit_length()) if L else 8

@@ -39,6 +39,9 @@ class Store:
         # bumped on every manifest mutation; query engines use it to know
         # when their row caches are stale
         self.version = 0
+        # (inode, mtime_ns, size) of store.json as last read/written; lets
+        # refresh() detect another process's commit with one stat()
+        self._meta_sig = self._stat_sig()
 
     # ------------------------------------------------------- lifecycle
     @classmethod
@@ -61,12 +64,41 @@ class Store:
     def exists(path: str) -> bool:
         return os.path.exists(os.path.join(path, STORE_META))
 
+    def _stat_sig(self) -> tuple | None:
+        try:
+            st = os.stat(os.path.join(self.path, STORE_META))
+        except OSError:
+            return None
+        return (st.st_ino, st.st_mtime_ns, st.st_size)
+
     def _save(self) -> None:
         tmp = os.path.join(self.path, STORE_META + ".tmp")
         with open(tmp, "w") as f:
             json.dump(self.manifest, f, indent=2)
         os.replace(tmp, os.path.join(self.path, STORE_META))
+        self._meta_sig = self._stat_sig()
         self.version += 1
+
+    def refresh(self) -> bool:
+        """Pick up another process's manifest commit (append / ingest /
+        compact). Cheap when nothing changed — one ``stat()`` of store.json;
+        on change the manifest is re-read, lazily-opened segments are
+        dropped, and ``version`` bumps so engines invalidate their row
+        caches. Serving workers call this between micro-batches, which is
+        how a mutation in the parent process becomes visible to queries
+        in flight through the serving layer.
+
+        Returns True if the manifest changed.
+        """
+        sig = self._stat_sig()
+        if sig is None or sig == self._meta_sig:
+            return False
+        with open(os.path.join(self.path, STORE_META)) as f:
+            self.manifest = json.load(f)
+        self._meta_sig = sig
+        self._segments.clear()
+        self.version += 1
+        return True
 
     # ------------------------------------------------------- properties
     @property

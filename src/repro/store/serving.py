@@ -1,36 +1,51 @@
 """Multi-client co-occurrence serving: shared-mmap workers, micro-batched
-kernel launches.
+kernel launches, typed wire protocol, hot-term routing, streaming top-k.
 
 The query engine (store/query.py) already batches *within* one call; this
 layer batches *across clients*, the way a real serving deployment amortizes
 kernel launches over concurrent traffic:
 
-    clients ──▶ request queue ──▶ worker processes ──▶ response queue ─▶ router
-    (threads)   (shared, mp)      (N × Store + QueryEngine)  (mp)        (thread)
+    clients ──▶ request queue(s) ──▶ worker processes ──▶ response queue ─▶ router
+    (threads)   (shared or routed)   (N × Store + QueryEngine)   (mp)      (thread)
 
+* **Typed wire protocol** — the request dataclasses of store/requests.py
+  *are* what crosses the process boundary: a client submits
+  ``(client_id, request_id, part, parts, request)`` envelopes whose payload
+  is the same frozen ``TopKRequest | PairCountsRequest | NeighboursRequest``
+  the in-process engine executes. Invalid queries (unknown score, bad dtype,
+  k < 1) therefore fail at request construction on the client — a worker
+  never sees them.
 * **Shared mmap** — every worker process opens the same immutable segment
   files with ``np.memmap``; the OS page cache backs all mappings with one
   physical copy, so N workers serve a 100 GB store with ~one store's worth
-  of resident pages. Nothing is pickled or copied per query but the request
-  and its (B, k) result.
+  of resident pages. Workers ``Store.refresh()`` between micro-batches, so
+  a manifest commit (append/ingest/compact) in the parent becomes visible
+  to in-flight serving traffic without a restart.
 * **Micro-batching with a latency budget** — a worker takes the first
-  request off the shared queue, then keeps draining for at most
-  ``batch_window_ms`` (or until ``max_batch`` requests), coalesces
-  compatible requests — same ``(k, score)`` for top-k, all pair lookups
-  together — and executes each group as **one** batched kernel launch
-  (numpy reference or the Pallas top-k gather, per ``kernel=``).
-* **Warm/cold row routing** — each worker routes rows through its
-  QueryEngine's LRU cache: hot (Zipf-head) rows are served from memory,
-  cold rows fall through to the shared mmap. Per-worker hit/miss counters
-  are aggregated into the server's final stats.
+  request off its queue, then keeps draining for at most ``batch_window_ms``
+  (or until ``max_batch`` requests), coalesces compatible requests — same
+  ``(k, score)`` for top-k, all pair lookups together — and executes each
+  group as **one** batched launch via the same ``execute_groups`` path the
+  in-process engine uses.
+* **Hot-term routing** (``routing=True``) — each worker gets its own request
+  queue and the client-side :class:`~repro.store.requests.QueryPlanner`
+  splits every top-k request by term ownership (``route_term``), so the N
+  per-worker LRU row caches hold N disjoint slices of the vocabulary
+  instead of N copies of the Zipf head. Per-worker hit rates are surfaced
+  in the server's final stats.
+* **Streaming top-k** — a ``TopKRequest(chunk=c)`` comes back as an iterator
+  of score-ordered ``(ids, scores)`` column blocks: large-k responses cross
+  the queue chunk by chunk instead of as one monolithic pickle.
 
 Example (driver-side; see launch/cooc_serve.py for the full workload)::
 
-    server = CoocServer(store_path, workers=4, batch_window_ms=2.0,
-                        kernel="pallas").start()
+    server = CoocServer(store_path, workers=4, routing=True,
+                        batch_window_ms=2.0, kernel="pallas").start()
     client = server.client()                 # one per client thread
     ids, scores = client.topk([3, 17], k=10, score="pmi")
-    stats = server.stop()                    # {"requests": ..., "batches": ...}
+    for ids_c, scores_c in client.topk_stream([3], k=5000, chunk=512):
+        ...                                  # score-ordered chunks
+    stats = server.stop()                    # {"requests": ..., "cache_hit_rate": ...}
 
 Workers are **spawned** (never forked): JAX runtimes do not survive a fork,
 and a spawned worker importing the store from disk is exactly the
@@ -50,7 +65,22 @@ import time
 
 import numpy as np
 
+from repro.store.requests import (
+    NeighboursRequest,
+    PairCountsRequest,
+    QueryPlanner,
+    TopKRequest,
+    coalesce,
+    execute_groups,
+)
+
 _STOP = None  # queue sentinel; one per worker, re-enqueued if drained early
+
+_STAT_KEYS = (
+    "requests", "batches", "max_batch_requests",
+    "topk_queries", "topk_launches", "pair_queries", "pair_launches",
+    "neighbours_queries", "stream_chunks", "store_refreshes",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,7 +90,7 @@ class ServingConfig:
 
     Example::
 
-        cfg = ServingConfig(workers=4, batch_window_ms=2.0, kernel="pallas")
+        cfg = ServingConfig(workers=4, routing=True, kernel="pallas")
     """
 
     workers: int = 2
@@ -68,6 +98,7 @@ class ServingConfig:
     max_batch: int = 64               # requests coalesced per launch, at most
     kernel: str = "numpy"             # "numpy" | "pallas" (see store/query.py)
     cache_rows: int = 4096            # per-worker LRU capacity
+    routing: bool = False             # hot-term routing: per-worker queues
 
     def __post_init__(self):
         if self.workers < 1:
@@ -84,66 +115,36 @@ class ServingConfig:
 
 
 def _serve_batch(engine, batch, response_q, worker_id: int, stats: dict) -> None:
-    """Coalesce one micro-batch and answer it with as few kernel launches as
-    possible: one ``topk`` per distinct (k, score), one ``pair_counts`` for
-    all pair lookups. Invalid requests get error responses and do not poison
-    the rest of the batch."""
+    """Coalesce one micro-batch of request envelopes and answer it with as
+    few kernel launches as possible, through the same ``execute_groups``
+    path as ``QueryEngine.execute``. Invalid requests get error responses
+    and do not poison the rest of the batch."""
     stats["batches"] += 1
     stats["requests"] += len(batch)
     stats["max_batch_requests"] = max(stats["max_batch_requests"], len(batch))
     meta = {"worker": worker_id, "batch_requests": len(batch)}
+    finished: set = set()  # tags whose final message went out
 
-    topk_groups: dict[tuple[int, str], list] = {}
-    pair_reqs: list = []
-    for kind, cid, rid, *body in batch:
-        try:
-            if kind == "topk":
-                terms, k, score = body
-                terms = np.atleast_1d(np.asarray(terms, dtype=np.int64))
-                engine._check_terms(terms)  # the engine's canonical errors
-                topk_groups.setdefault((int(k), score), []).append(
-                    (cid, rid, terms)
-                )
-            elif kind == "pairs":
-                (pairs,) = body
-                pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
-                engine._check_terms(pairs.reshape(-1))
-                pair_reqs.append((cid, rid, pairs))
-            else:
-                raise ValueError(f"unknown request kind {kind!r}")
-        except (ValueError, TypeError) as e:
-            response_q.put((cid, rid, False, ("value_error", str(e)), meta))
+    def emit(tag, ok, payload, *, seq=0, last=True, extra=None):
+        cid, rid, part, parts = tag
+        m = {**meta, **(extra or {})}
+        if last:
+            finished.add(tag)
+        response_q.put((cid, rid, part, parts, seq, last, ok, payload, m))
 
-    for (k, score), reqs in topk_groups.items():
-        all_terms = np.concatenate([t for _, _, t in reqs])
-        try:
-            ids, scores = engine.topk(all_terms, k=k, score=score)
-        except ValueError as e:  # e.g. unknown score name
-            for cid, rid, _ in reqs:
-                response_q.put((cid, rid, False, ("value_error", str(e)), meta))
-            continue
-        stats["topk_queries"] += len(all_terms)
-        stats["topk_launches"] += 1
-        off = 0
-        gmeta = {**meta, "coalesced_requests": len(reqs)}
-        for cid, rid, terms in reqs:
-            n = len(terms)
-            response_q.put(
-                (cid, rid, True, (ids[off : off + n], scores[off : off + n]), gmeta)
-            )
-            off += n
-
-    if pair_reqs:
-        all_pairs = np.concatenate([p for _, _, p in pair_reqs])
-        counts = engine.pair_counts(all_pairs)
-        stats["pair_queries"] += len(all_pairs)
-        stats["pair_launches"] += 1
-        off = 0
-        gmeta = {**meta, "coalesced_requests": len(pair_reqs)}
-        for cid, rid, pairs in pair_reqs:
-            n = len(pairs)
-            response_q.put((cid, rid, True, counts[off : off + n], gmeta))
-            off += n
+    tagged = [
+        ((cid, rid, part, parts), req) for cid, rid, part, parts, req in batch
+    ]
+    try:
+        execute_groups(engine, coalesce(tagged), emit, stats=stats)
+    except Exception as e:
+        # an unexpected error (e.g. a segment racing a parent compact())
+        # must not kill the worker with clients blocked on responses: fail
+        # every request that has not answered yet and keep serving
+        msg = f"worker {worker_id} error: {type(e).__name__}: {e}"
+        for tag, _ in tagged:
+            if tag not in finished:
+                emit(tag, False, ("serving_error", msg))
 
 
 def _worker_main(
@@ -156,22 +157,17 @@ def _worker_main(
 ) -> None:
     """One serving worker: open the store (mmap — pages shared with every
     sibling via the OS page cache), then loop: block for a request, drain the
-    queue under the latency budget, serve the coalesced batch."""
+    queue under the latency budget, serve the coalesced batch. Between
+    batches the store manifest is refreshed, so parent-process mutations
+    (append/compact) invalidate this worker's row cache exactly like they
+    invalidate a direct engine's."""
     from repro.store.query import QueryEngine
     from repro.store.segments import Store
 
     engine = QueryEngine(
         Store.open(store_path), cache_rows=cfg.cache_rows, kernel=cfg.kernel
     )
-    stats = {
-        "requests": 0,
-        "batches": 0,
-        "max_batch_requests": 0,
-        "topk_queries": 0,
-        "topk_launches": 0,
-        "pair_queries": 0,
-        "pair_launches": 0,
-    }
+    stats = {k: 0 for k in _STAT_KEYS}
     window_s = cfg.batch_window_ms / 1e3
     stop = False
     while not stop:
@@ -193,8 +189,12 @@ def _worker_main(
                 stop = True
                 break
             batch.append(nxt)
+        if engine.store.refresh():  # cross-process append/compact visibility
+            stats["store_refreshes"] += 1
         _serve_batch(engine, batch, response_q, worker_id, stats)
     stats.update(engine.stats)  # cache_hits / cache_misses
+    hits, misses = stats["cache_hits"], stats["cache_misses"]
+    stats["cache_hit_rate"] = round(hits / max(hits + misses, 1), 4)
     stats_q.put((worker_id, stats))
 
 
@@ -207,6 +207,52 @@ class ServingError(RuntimeError):
     """A request failed inside a worker; carries the worker's message."""
 
 
+class _StreamIterator:
+    """Chunk iterator of one streamed top-k request. Cleanup (abandoning the
+    request id so in-flight chunks are discarded, not buffered forever) is
+    guaranteed whether the stream is fully consumed, closed early, errors,
+    or is dropped before the first ``next()`` — a plain generator's
+    ``finally`` never runs if the body is never entered."""
+
+    def __init__(self, client: "CoocClient", rid: int, timeout: float):
+        self._client = client
+        self._rid = rid
+        self._timeout = timeout
+        self._in_flight = 1
+        self._closed = False
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._closed:
+            raise StopIteration
+        try:
+            _, _, seq, last, ok, payload, meta = self._client._next_msg(
+                self._rid, self._timeout
+            )
+        except Exception:
+            self.close()
+            raise
+        self._client.last_meta = meta
+        if last:
+            self._in_flight = 0
+        if not ok:
+            self.close()
+            self._client._raise(payload)
+        if last:
+            self.close()
+        return payload
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._client._abandon(self._rid, self._in_flight)
+
+    def __del__(self):  # dropped without consumption
+        self.close()
+
+
 class CoocClient:
     """A client handle bound to one :class:`CoocServer`.
 
@@ -214,6 +260,11 @@ class CoocClient:
     ``server.client()``; a handle's methods are blocking RPCs and may be
     called from exactly one thread. ``last_meta`` exposes how the previous
     request was served (worker id, micro-batch size, coalesced requests).
+
+    ``execute()`` mirrors ``QueryEngine.execute``: a batch of typed request
+    objects in, one result per request out — the planner may split a request
+    across routed workers and this handle reassembles the slices
+    byte-identically.
 
     Example::
 
@@ -227,62 +278,169 @@ class CoocClient:
         self._client_id = client_id
         self._box = box
         self._req_ids = itertools.count()
-        self._pending: dict[int, tuple] = {}
+        self._msgs: dict[int, list] = {}       # rid -> buffered messages
+        self._positions: dict[int, dict] = {}  # rid -> {part: positions}
+        self._discard: dict[int, int] = {}     # abandoned rid -> parts in flight
         self.last_meta: dict = {}
+
+    # ------------------------------------------------------------- typed API
+    def execute(self, requests, *, timeout: float = 60.0) -> list:
+        """Submit a batch of typed requests; returns one result per request
+        (streamed top-k yields an iterator of chunks). All parts of all
+        requests are submitted before any response is awaited, so distinct
+        requests can share a worker micro-batch."""
+        plan = self._server.planner.plan(requests)
+        entries = []
+        for req, parts in zip(plan.requests, plan.parts):
+            rid = next(self._req_ids)
+            self._positions[rid] = {rp.part: rp.positions for rp in parts}
+            for rp in parts:
+                self._server._submit(
+                    rp.worker,
+                    (self._client_id, rid, rp.part, rp.parts, rp.request),
+                )
+            entries.append((rid, req))
+        out = []
+        for idx, (rid, req) in enumerate(entries):
+            try:
+                if isinstance(req, TopKRequest) and req.chunk is not None:
+                    out.append(self._stream(rid, req, timeout))
+                else:
+                    out.append(self._assemble(rid, req, timeout))
+            except Exception:
+                # the failing request abandoned itself; abandon the already
+                # submitted later siblings too, or their responses would
+                # buffer in _msgs forever
+                for later_rid, _ in entries[idx + 1:]:
+                    planned = max(len(self._positions.pop(later_rid, {})), 1)
+                    self._abandon(later_rid, planned)
+                raise
+        return out
 
     def topk(self, terms, k: int = 10, *, score: str = "count", timeout: float = 60.0):
         """Top-k neighbours, served through the shared worker pool. Returns
         ``(ids (B, k), scores (B, k))`` exactly like ``QueryEngine.topk``."""
-        rid = next(self._req_ids)
-        self._server._submit(
-            ("topk", self._client_id, rid,
-             np.asarray(terms, dtype=np.int64), int(k), score)
-        )
-        return self._wait(rid, timeout)
+        return self.execute([TopKRequest(terms, k=k, score=score)],
+                            timeout=timeout)[0]
+
+    def topk_stream(
+        self, terms, k: int, *, score: str = "count", chunk: int = 1024,
+        timeout: float = 60.0,
+    ):
+        """Streaming top-k: iterator of score-ordered ``(ids, scores)``
+        column blocks of width ≤ ``chunk``; concatenation along axis 1
+        equals the monolithic ``topk`` result exactly."""
+        return self.execute(
+            [TopKRequest(terms, k=k, score=score, chunk=chunk)], timeout=timeout
+        )[0]
 
     def pair_counts(self, pairs, *, timeout: float = 60.0) -> np.ndarray:
         """Exact counts for a (B, 2) pair batch, served remotely."""
-        rid = next(self._req_ids)
-        self._server._submit(
-            ("pairs", self._client_id, rid, np.asarray(pairs, dtype=np.int64))
-        )
-        return self._wait(rid, timeout)
+        return self.execute([PairCountsRequest(pairs)], timeout=timeout)[0]
 
-    def _wait(self, rid: int, timeout: float):
+    def neighbours(self, t: int, *, timeout: float = 60.0):
+        """The full merged ``(ids, counts)`` row of term ``t``, served
+        remotely (out-of-vocab ids raise the engine's ValueError)."""
+        return self.execute([NeighboursRequest(t)], timeout=timeout)[0]
+
+    # ------------------------------------------------------------- assembly
+    def _next_msg(self, rid: int, timeout: float):
+        """Next buffered/arriving message for ``rid`` (others are buffered;
+        messages for abandoned request ids are dropped, not buffered)."""
         deadline = time.monotonic() + timeout
-        while rid not in self._pending:
+        while not self._msgs.get(rid):
             remaining = deadline - time.monotonic()
             if remaining <= 0:
                 raise TimeoutError(f"no response for request {rid} in {timeout}s")
             try:
-                got_rid, ok, payload, meta = self._box.get(timeout=remaining)
+                got_rid, *msg = self._box.get(timeout=remaining)
             except queue.Empty:
                 raise TimeoutError(
                     f"no response for request {rid} in {timeout}s"
                 ) from None
-            self._pending[got_rid] = (ok, payload, meta)
-        ok, payload, meta = self._pending.pop(rid)
-        self.last_meta = meta
-        if not ok:
-            kind, message = payload
-            if kind == "value_error":
-                raise ValueError(message)  # mirror QueryEngine's local errors
-            raise ServingError(message)
-        return payload
+            if got_rid in self._discard:
+                if msg[3]:  # last flag: one in-flight part fully drained
+                    self._discard[got_rid] -= 1
+                    if self._discard[got_rid] <= 0:
+                        del self._discard[got_rid]
+                continue
+            self._msgs.setdefault(got_rid, []).append(msg)
+        return self._msgs[rid].pop(0)
+
+    def _abandon(self, rid: int, in_flight: int) -> None:
+        """Stop expecting ``rid`` (error, timeout, or a dropped stream):
+        free its buffers and mark however many part-final messages are
+        still in flight for discard, so a dead request id can never grow
+        ``_msgs`` forever."""
+        for msg in self._msgs.pop(rid, []):
+            if msg[3]:  # last flag
+                in_flight -= 1
+        if in_flight > 0:
+            self._discard[rid] = in_flight
+
+    def _raise(self, payload):
+        kind, message = payload
+        if kind == "value_error":
+            raise ValueError(message)  # mirror QueryEngine's local errors
+        raise ServingError(message)
+
+    def _assemble(self, rid: int, req, timeout: float):
+        """Collect all parts of a non-streamed request and scatter routed
+        top-k slices back into their original row positions."""
+        positions = self._positions.pop(rid, {})
+        planned = max(len(positions), 1)
+        done: dict[int, tuple] = {}
+        finished = 0
+        try:
+            while finished < planned:
+                part, nparts, seq, last, ok, payload, meta = self._next_msg(
+                    rid, timeout
+                )
+                self.last_meta = meta
+                if last:
+                    finished += 1
+                if not ok:
+                    self._raise(payload)
+                done[part] = payload
+        except Exception:
+            self._abandon(rid, planned - finished)
+            raise
+        self._msgs.pop(rid, None)
+        if planned == 1:
+            return done[0]
+        # routed top-k: scatter each worker's rows back by original position
+        ids_p, scores_p = done[0]
+        B = req.batch
+        ids = np.empty((B, ids_p.shape[1]), dtype=ids_p.dtype)
+        scores = np.empty((B, scores_p.shape[1]), dtype=scores_p.dtype)
+        for part, (pids, pscores) in done.items():
+            pos = positions[part]
+            ids[pos] = pids
+            scores[pos] = pscores
+        return ids, scores
+
+    def _stream(self, rid: int, req, timeout: float) -> _StreamIterator:
+        """Lazy iterator over a streamed top-k's chunks, in score order.
+        Dropping/closing the iterator at any point (even before the first
+        ``next()``) abandons the rid, so unconsumed in-flight chunks are
+        discarded instead of buffered forever."""
+        self._positions.pop(rid, None)
+        return _StreamIterator(self, rid, timeout)
 
 
 class CoocServer:
     """Serve one on-disk store to many clients through shared-mmap worker
-    processes with cross-client micro-batching.
+    processes with cross-client micro-batching and (optionally) hot-term
+    routing.
 
     Lifecycle: ``start()`` spawns the workers and the response router;
     ``client()`` mints per-thread client handles; ``stop()`` drains the
-    workers and returns aggregated serving stats. Usable as a context
-    manager.
+    workers and returns aggregated serving stats (including the aggregate
+    and per-worker row-cache hit rates). Usable as a context manager.
 
     Example::
 
-        with CoocServer(path, workers=4, batch_window_ms=2.0) as server:
+        with CoocServer(path, workers=4, routing=True) as server:
             ids, scores = server.client().topk([3], k=10)
         # __exit__ stopped the workers; server.stats holds the aggregate
     """
@@ -296,21 +454,28 @@ class CoocServer:
         max_batch: int = 64,
         kernel: str = "numpy",
         cache_rows: int = 4096,
+        routing: bool = False,
     ):
-        from repro.store.query import KERNELS
         from repro.store.segments import Store
 
         if not Store.exists(store_path):
             raise FileNotFoundError(f"no store at {store_path}")
-        if kernel not in KERNELS:
-            raise ValueError(f"unknown kernel {kernel!r}; have {KERNELS}")
+        # the client-side planner: with routing, terms are hashed to the
+        # worker that owns their cache row; without, one shared queue. The
+        # planner's choices are authoritative — the worker config is built
+        # from them, so plan and deployment cannot disagree (routing is
+        # reported as inactive when workers == 1).
+        self.planner = QueryPlanner(
+            workers=workers, routing=routing, kernel=kernel
+        )
         self.store_path = store_path
         self.config = ServingConfig(
             workers=workers,
             batch_window_ms=batch_window_ms,
             max_batch=max_batch,
-            kernel=kernel,
+            kernel=self.planner.kernel,
             cache_rows=cache_rows,
+            routing=self.planner.routing,
         )
         self.stats: dict = {}
         self._procs: list = []
@@ -324,7 +489,10 @@ class CoocServer:
         if self._started:
             raise RuntimeError("server already started")
         ctx = mp.get_context("spawn")
-        self._request_q = ctx.Queue()
+        # routed: one request queue per worker (the planner picks the queue);
+        # unrouted: one shared queue every worker drains (work stealing)
+        n_queues = self.config.workers if self.config.routing else 1
+        self._request_qs = [ctx.Queue() for _ in range(n_queues)]
         self._response_q = ctx.Queue()
         self._stats_q = ctx.Queue()
         # spawned children re-import repro.store.serving: make sure the
@@ -361,7 +529,7 @@ class CoocServer:
                         i,
                         self.store_path,
                         self.config,
-                        self._request_q,
+                        self._request_qs[i % n_queues],
                         self._response_q,
                         self._stats_q,
                     ),
@@ -387,15 +555,16 @@ class CoocServer:
             item = self._response_q.get()
             if item is _STOP:
                 return
-            cid, rid, ok, payload, meta = item
+            cid, rid, part, parts, seq, last, ok, payload, meta = item
             box = self._boxes.get(cid)
             if box is not None:
-                box.put((rid, ok, payload, meta))
+                box.put((rid, part, parts, seq, last, ok, payload, meta))
 
-    def _submit(self, req) -> None:
+    def _submit(self, worker: int | None, envelope) -> None:
         if not self._started:
             raise RuntimeError("server not started (call start())")
-        self._request_q.put(req)
+        qs = self._request_qs
+        qs[worker % len(qs) if worker is not None else 0].put(envelope)
 
     def client(self) -> CoocClient:
         """Mint a client handle (one per concurrent client thread)."""
@@ -408,8 +577,12 @@ class CoocServer:
         """Drain the workers and return aggregated serving stats."""
         if not self._started:
             return self.stats
-        for _ in self._procs:
-            self._request_q.put(_STOP)
+        if self.config.routing:
+            for q in self._request_qs:
+                q.put(_STOP)
+        else:
+            for _ in self._procs:
+                self._request_qs[0].put(_STOP)
         per_worker = {}
         deadline = time.monotonic() + timeout
         for _ in self._procs:
@@ -441,6 +614,7 @@ class CoocServer:
         agg = {
             k: sum(w[k] for w in per_worker.values())
             for k in next(iter(per_worker.values()))
+            if k != "cache_hit_rate"
         } if per_worker else {}
         if agg:
             agg["max_batch_requests"] = max(
@@ -449,10 +623,16 @@ class CoocServer:
             agg["avg_requests_per_batch"] = round(
                 agg["requests"] / max(agg["batches"], 1), 2
             )
+            agg["cache_hit_rate"] = round(
+                agg["cache_hits"]
+                / max(agg["cache_hits"] + agg["cache_misses"], 1),
+                4,
+            )
         self.stats = {
             "workers": self.config.workers,
             "kernel": self.config.kernel,
             "batch_window_ms": self.config.batch_window_ms,
+            "routing": self.config.routing,
             **agg,
             "per_worker": [per_worker[w] for w in sorted(per_worker)],
         }

@@ -1,0 +1,212 @@
+"""Typed query-request API: construction-time validation, planner routing,
+coalesced execution, shim byte-identity, and streaming top-k."""
+
+import numpy as np
+import pytest
+
+from repro.core.cooc import count_to_store
+from repro.store import (
+    NeighboursRequest,
+    PairCountsRequest,
+    QueryEngine,
+    QueryPlanner,
+    Store,
+    TopKRequest,
+    route_term,
+)
+from repro.store.requests import coalesce, route_terms
+
+from repro.data.corpus import synthetic_zipf_collection
+
+
+@pytest.fixture(scope="module")
+def coll():
+    return synthetic_zipf_collection(200, vocab=256, mean_len=14, seed=9)
+
+
+@pytest.fixture(scope="module")
+def store_path(coll, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("requests") / "store")
+    count_to_store("list-scan", coll, path)
+    return path
+
+
+@pytest.fixture()
+def engine(store_path):
+    return QueryEngine(Store.open(store_path))
+
+
+# -------------------------------------------------------------- validation
+def test_topk_request_validation():
+    req = TopKRequest([3, 17], k=5, score="pmi")
+    assert req.terms.dtype == np.int64 and req.batch == 2
+    with pytest.raises(ValueError, match="unknown score"):
+        TopKRequest([1], score="cosine")
+    with pytest.raises(ValueError, match="k must be"):
+        TopKRequest([1], k=0)
+    with pytest.raises(ValueError, match="integer term ids"):
+        TopKRequest(np.array([1.5, 2.0]))
+    with pytest.raises(ValueError, match="1-D"):
+        TopKRequest(np.zeros((2, 2), dtype=np.int64))
+    with pytest.raises(ValueError, match="chunk must be"):
+        TopKRequest([1], chunk=0)
+    # scalars and empty batches normalize
+    assert TopKRequest(7).terms.tolist() == [7]
+    assert TopKRequest([]).batch == 0
+
+
+def test_pair_counts_request_validation():
+    req = PairCountsRequest([3, 17])          # (2,) -> (1, 2)
+    assert req.pairs.shape == (1, 2) and req.pairs.dtype == np.int64
+    with pytest.raises(ValueError, match=r"shape \(B, 2\)"):
+        PairCountsRequest(np.zeros((3, 3), dtype=np.int64))
+    with pytest.raises(ValueError, match="integer term ids"):
+        PairCountsRequest(np.array([[1.0, 2.0]]))
+
+
+def test_neighbours_request_validation():
+    assert NeighboursRequest(np.int64(3)).term == 3
+    with pytest.raises(ValueError, match="integer id"):
+        NeighboursRequest(3.5)
+    with pytest.raises(ValueError, match="integer id"):
+        NeighboursRequest("3")
+
+
+def test_planner_rejects_non_requests():
+    with pytest.raises(TypeError, match="not a query request"):
+        QueryPlanner().plan([("topk", [1], 5)])
+    with pytest.raises(ValueError, match="unknown kernel"):
+        QueryPlanner(kernel="cuda")
+    with pytest.raises(ValueError, match="workers"):
+        QueryPlanner(workers=0)
+
+
+# ----------------------------------------------------------------- routing
+def test_route_term_deterministic_and_vectorized():
+    terms = np.arange(1000)
+    owners = route_terms(terms, 4)
+    assert owners.min() >= 0 and owners.max() < 4
+    assert all(route_term(int(t), 4) == owners[i] for i, t in enumerate(terms))
+    # every worker owns a nontrivial slice of the vocabulary
+    assert len(np.unique(owners)) == 4
+
+
+def test_planner_splits_topk_by_owner():
+    req = TopKRequest(np.arange(64), k=5)
+    plan = QueryPlanner(workers=4, routing=True).plan([req])
+    parts = plan.parts[0]
+    assert 1 < len(parts) <= 4
+    seen = np.concatenate([p.positions for p in parts])
+    assert sorted(seen.tolist()) == list(range(64))  # exact partition
+    for p in parts:
+        assert (route_terms(p.request.terms, 4) == p.worker).all()
+        np.testing.assert_array_equal(p.request.terms, req.terms[p.positions])
+    by_worker = plan.by_worker()
+    assert set(by_worker) == {p.worker for p in parts}
+
+
+def test_planner_unrouted_and_special_cases():
+    reqs = [
+        TopKRequest(np.arange(64), k=5),
+        TopKRequest(np.arange(64), k=1000, chunk=64),  # streams never split
+        PairCountsRequest(np.array([[1, 2]])),         # pairs never split
+        NeighboursRequest(5),
+    ]
+    plan = QueryPlanner(workers=4, routing=False).plan(reqs)
+    assert all(len(p) == 1 and p[0].worker is None for p in plan.parts)
+    plan = QueryPlanner(workers=4, routing=True).plan(reqs)
+    assert len(plan.parts[1]) == 1     # stream: one worker owns the chunks
+    assert plan.parts[1][0].worker == route_term(0, 4)
+    assert len(plan.parts[2]) == 1
+    assert plan.parts[3][0].worker == route_term(5, 4)
+    assert plan.describe()["routing"] is True
+
+
+# ------------------------------------------------------------- coalescing
+def test_coalesce_groups_by_k_score():
+    reqs = [
+        TopKRequest([1], k=5),
+        TopKRequest([2, 3], k=5),
+        TopKRequest([4], k=5, score="pmi"),
+        TopKRequest([5], k=100, chunk=10),
+        PairCountsRequest(np.array([[1, 2]])),
+        PairCountsRequest(np.array([[3, 4]])),
+        NeighboursRequest(1),
+    ]
+    groups = coalesce(list(enumerate(reqs)))
+    kinds = [g.kind for g in groups]
+    assert kinds.count("topk") == 2          # (5, count) + (5, pmi)
+    assert kinds.count("topk-stream") == 1
+    assert kinds.count("pairs") == 1         # both pair requests together
+    assert kinds.count("neighbours") == 1
+    topk_count = next(g for g in groups if g.key == (5, "count"))
+    assert [t for t, _ in topk_count.items] == [0, 1]
+
+
+# ----------------------------------------------------- execution + shims
+def test_execute_matches_shims_both_kernels(store_path):
+    for kernel in ("numpy", "pallas"):
+        eng = QueryEngine(Store.open(store_path), kernel=kernel)
+        terms = np.array([0, 1, 2, 3, 250])
+        pairs = np.array([[0, 1], [5, 5], [7, 200]])
+        (ids, scores), counts, (nids, ncnts) = eng.execute([
+            TopKRequest(terms, k=6, score="count"),
+            PairCountsRequest(pairs),
+            NeighboursRequest(3),
+        ])
+        rids, rscores = eng.topk(terms, k=6, score="count")
+        np.testing.assert_array_equal(ids, rids)
+        np.testing.assert_array_equal(scores, rscores)
+        np.testing.assert_array_equal(counts, eng.pair_counts(pairs))
+        np.testing.assert_array_equal(nids, eng.neighbours(3)[0])
+        np.testing.assert_array_equal(ncnts, eng.neighbours(3)[1])
+
+
+def test_execute_coalesces_same_k_score(engine):
+    """Two (k, score)-compatible requests answer from one launch and still
+    slice back to their individual results."""
+    a, b = TopKRequest([1, 2], k=4), TopKRequest([3], k=4)
+    (ia, sa), (ib, sb) = engine.execute([a, b])
+    ref_i, ref_s = engine.topk([1, 2, 3], k=4)
+    np.testing.assert_array_equal(np.concatenate([ia, ib]), ref_i)
+    np.testing.assert_array_equal(np.concatenate([sa, sb]), ref_s)
+
+
+def test_execute_raises_engine_canonical_oov(engine):
+    with pytest.raises(ValueError, match="out-of-vocab"):
+        engine.execute([TopKRequest([9999], k=3)])
+    with pytest.raises(ValueError, match="out-of-vocab"):
+        engine.execute([PairCountsRequest(np.array([[0, -4]]))])
+    with pytest.raises(ValueError, match="out-of-vocab"):
+        engine.execute([NeighboursRequest(9999)])
+
+
+def test_neighbours_validates_oov(engine):
+    """Satellite: neighbours raises the same informative error as topk and
+    pair_counts instead of crashing (or silently reading) out of range."""
+    with pytest.raises(ValueError, match="out-of-vocab"):
+        engine.neighbours(10_000)
+    with pytest.raises(ValueError, match="out-of-vocab"):
+        engine.neighbours(-1)
+
+
+# --------------------------------------------------------------- streaming
+@pytest.mark.parametrize("score", ["count", "pmi"])
+@pytest.mark.parametrize("k,chunk", [(11, 4), (4, 100), (257, 32)])
+def test_stream_chunks_concatenate_to_monolithic(engine, score, k, chunk):
+    terms = [0, 1, 2]
+    chunks = list(engine.topk_stream(terms, k=k, score=score, chunk=chunk))
+    mono_ids, mono_scores = engine.topk(terms, k=k, score=score)
+    assert len(chunks) == max(-(-k // chunk), 1)
+    assert all(c[0].shape[1] <= chunk for c in chunks)
+    np.testing.assert_array_equal(
+        np.concatenate([c[0] for c in chunks], axis=1), mono_ids)
+    np.testing.assert_array_equal(
+        np.concatenate([c[1] for c in chunks], axis=1), mono_scores)
+
+
+def test_stream_is_score_ordered(engine):
+    chunks = list(engine.topk_stream([1], k=20, chunk=6))
+    scores = np.concatenate([c[1] for c in chunks], axis=1)[0]
+    finite = scores[np.isfinite(scores.astype(np.float64))]
+    assert (np.diff(finite.astype(np.float64)) <= 0).all()

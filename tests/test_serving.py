@@ -1,6 +1,7 @@
 """Multi-client serving layer: coalescing correctness (unit level, no
 processes) and the real thing — spawned shared-mmap workers serving
-concurrent client threads with results identical to a direct QueryEngine."""
+concurrent client threads with results identical to a direct QueryEngine,
+plus hot-term routing, streaming top-k, and cross-process store mutation."""
 
 import queue
 import threading
@@ -11,8 +12,16 @@ import pytest
 from repro.core.cooc import count_to_store
 from repro.core.oracle import brute_force_counts
 from repro.data.corpus import synthetic_zipf_collection
-from repro.store import CoocServer, QueryEngine, ServingConfig, Store
-from repro.store.serving import _serve_batch
+from repro.store import (
+    CoocServer,
+    NeighboursRequest,
+    PairCountsRequest,
+    QueryEngine,
+    ServingConfig,
+    Store,
+    TopKRequest,
+)
+from repro.store.serving import _STAT_KEYS, _serve_batch
 
 
 @pytest.fixture(scope="module")
@@ -39,22 +48,19 @@ def test_serving_config_validation():
 
 # ------------------------------------------------- batch coalescing (unit)
 def test_serve_batch_coalesces_and_splits(store_path, coll):
-    """One micro-batch with mixed requests: per-(k, score) topk groups and
-    all pair lookups each become a single launch, and every client gets
-    exactly its slice back."""
+    """One micro-batch of typed request envelopes: per-(k, score) topk
+    groups and all pair lookups each become a single launch, and every
+    client gets exactly its slice back."""
     engine = QueryEngine(Store.open(store_path))
     out = queue.Queue()
-    stats = {k: 0 for k in (
-        "requests", "batches", "max_batch_requests",
-        "topk_queries", "topk_launches", "pair_queries", "pair_launches",
-    )}
+    stats = {k: 0 for k in _STAT_KEYS}
     batch = [
-        ("topk", 0, 0, np.array([1, 2]), 4, "count"),
-        ("topk", 1, 0, np.array([3]), 4, "count"),      # coalesces with above
-        ("topk", 0, 1, np.array([5]), 2, "pmi"),        # different group
-        ("pairs", 1, 1, np.array([[1, 2], [3, 4]])),
-        ("pairs", 0, 2, np.array([[5, 6]])),
-        ("topk", 1, 2, np.array([999]), 4, "count"),    # out-of-vocab -> error
+        (0, 0, 0, 1, TopKRequest(np.array([1, 2]), k=4)),
+        (1, 0, 0, 1, TopKRequest(np.array([3]), k=4)),    # coalesces with above
+        (0, 1, 0, 1, TopKRequest(np.array([5]), k=2, score="pmi")),
+        (1, 1, 0, 1, PairCountsRequest(np.array([[1, 2], [3, 4]]))),
+        (0, 2, 0, 1, PairCountsRequest(np.array([[5, 6]]))),
+        (1, 2, 0, 1, TopKRequest(np.array([999]), k=4)),  # out-of-vocab -> error
     ]
     _serve_batch(engine, batch, out, worker_id=0, stats=stats)
     assert stats["topk_launches"] == 2          # (4, count) + (2, pmi)
@@ -64,7 +70,8 @@ def test_serve_batch_coalesces_and_splits(store_path, coll):
 
     got = {}
     while not out.empty():
-        cid, rid, ok, payload, meta = out.get()
+        cid, rid, part, parts, seq, last, ok, payload, meta = out.get()
+        assert (part, parts, seq, last) == (0, 1, 0, True)
         got[(cid, rid)] = (ok, payload, meta)
     assert len(got) == 6
     err_kind, err_msg = got[(1, 2)][1]
@@ -84,6 +91,59 @@ def test_serve_batch_coalesces_and_splits(store_path, coll):
     np.testing.assert_array_equal(
         got[(0, 2)][1], ref.pair_counts(np.array([[5, 6]]))
     )
+
+
+def test_serve_batch_streams_and_neighbours(store_path):
+    engine = QueryEngine(Store.open(store_path))
+    out = queue.Queue()
+    stats = {k: 0 for k in _STAT_KEYS}
+    batch = [
+        (0, 0, 0, 1, TopKRequest(np.array([1]), k=10, chunk=4)),
+        (0, 1, 0, 1, NeighboursRequest(2)),
+    ]
+    _serve_batch(engine, batch, out, worker_id=0, stats=stats)
+    assert stats["stream_chunks"] == 3 and stats["neighbours_queries"] == 1
+    msgs = []
+    while not out.empty():
+        msgs.append(out.get())
+    chunks = sorted(
+        [m for m in msgs if m[1] == 0], key=lambda m: m[4]
+    )  # by seq
+    assert [m[5] for m in chunks] == [False, False, True]  # last flags
+    ids = np.concatenate([m[7][0] for m in chunks], axis=1)
+    ref_ids, _ = QueryEngine(engine.store).topk([1], k=10)
+    np.testing.assert_array_equal(ids, ref_ids)
+    (nmsg,) = [m for m in msgs if m[1] == 1]
+    np.testing.assert_array_equal(
+        nmsg[7][0], QueryEngine(engine.store).neighbours(2)[0]
+    )
+
+
+def test_serve_batch_survives_unexpected_error(store_path):
+    """A non-ValueError mid-batch (e.g. a segment racing a parent compact)
+    must produce error responses for the unanswered requests, not kill the
+    worker with clients blocked until timeout."""
+    engine = QueryEngine(Store.open(store_path))
+    out = queue.Queue()
+    stats = {k: 0 for k in _STAT_KEYS}
+
+    def boom(pairs):
+        raise OSError("segment vanished")
+
+    engine.store.pair_counts = boom
+    batch = [
+        (0, 0, 0, 1, TopKRequest(np.array([1]), k=3)),
+        (0, 1, 0, 1, PairCountsRequest(np.array([[1, 2]]))),
+    ]
+    _serve_batch(engine, batch, out, worker_id=0, stats=stats)
+    msgs = {}
+    while not out.empty():
+        cid, rid, part, parts, seq, last, ok, payload, meta = out.get()
+        msgs[rid] = (ok, payload)
+    assert msgs[0][0] is True                     # the earlier group answered
+    ok, (kind, message) = msgs[1]
+    assert ok is False and kind == "serving_error"
+    assert "segment vanished" in message
 
 
 # --------------------------------------------------- end-to-end (processes)
@@ -130,14 +190,97 @@ def test_server_multi_client_matches_engine(store_path, coll):
     assert not errors, errors
 
     stats = server.stats
-    assert stats["workers"] == 2
+    assert stats["workers"] == 2 and stats["routing"] is False
     assert stats["requests"] == n_clients * reqs_per_client * 2
     assert stats["topk_queries"] == n_clients * reqs_per_client * 8
     assert stats["pair_queries"] == n_clients * reqs_per_client * 6
     assert stats["batches"] >= 1
     assert stats["cache_hits"] + stats["cache_misses"] > 0
+    assert 0.0 <= stats["cache_hit_rate"] <= 1.0
     assert len(stats["per_worker"]) == 2
     assert metas and all("worker" in m for m in metas)
+
+
+def test_server_routed_matches_engine_and_partitions_caches(store_path, coll):
+    """Hot-term routing: results stay byte-identical to the direct engine
+    (split requests reassemble exactly), every worker's cache holds only
+    terms it owns, and on a Zipf-skewed workload the aggregate hit rate
+    beats the unrouted baseline with the same undersized LRU."""
+    ref = QueryEngine(Store.open(store_path))
+    V = coll.vocab_size
+    # Zipf-skewed draws: the hot head is much larger than cache_rows=8
+    rng = np.random.default_rng(3)
+    probs = (1.0 / np.arange(1, V + 1)) ** 1.0
+    probs /= probs.sum()
+    workload = [rng.choice(V, size=16, p=probs) for _ in range(60)]
+    pair_load = [rng.choice(V, size=(4, 2), p=None) for _ in range(10)]
+
+    hit_rates = {}
+    for routing in (False, True):
+        with CoocServer(
+            store_path, workers=2, batch_window_ms=1.0,
+            cache_rows=8, routing=routing,
+        ) as server:
+            client = server.client()
+            for terms in workload:
+                ids, scores = client.topk(terms, k=5, score="pmi")
+                rids, rscores = ref.topk(terms, k=5, score="pmi")
+                np.testing.assert_array_equal(ids, rids)
+                np.testing.assert_array_equal(scores, rscores)
+            for pairs in pair_load:
+                np.testing.assert_array_equal(
+                    client.pair_counts(pairs), ref.pair_counts(pairs)
+                )
+            nids, ncnts = client.neighbours(1)
+            np.testing.assert_array_equal(nids, ref.neighbours(1)[0])
+        hit_rates[routing] = server.stats["cache_hit_rate"]
+        assert server.stats["routing"] is routing
+    assert hit_rates[True] > hit_rates[False], hit_rates
+
+
+def test_server_streaming_topk(store_path):
+    ref = QueryEngine(Store.open(store_path))
+    with CoocServer(store_path, workers=2, batch_window_ms=1.0,
+                    routing=True) as server:
+        client = server.client()
+        chunks = list(client.topk_stream([1, 2, 3], k=23, chunk=8))
+        mono_ids, mono_scores = ref.topk([1, 2, 3], k=23)
+        assert [c[0].shape[1] for c in chunks] == [8, 8, 7]
+        np.testing.assert_array_equal(
+            np.concatenate([c[0] for c in chunks], axis=1), mono_ids)
+        np.testing.assert_array_equal(
+            np.concatenate([c[1] for c in chunks], axis=1), mono_scores)
+        # interleave: a monolithic request while a stream is half-consumed
+        stream = client.topk_stream([5], k=9, chunk=3)
+        first = next(stream)
+        ids, _ = client.topk([7], k=4)
+        np.testing.assert_array_equal(ids, ref.topk([7], k=4)[0])
+        rest = list(stream)
+        sids = np.concatenate([first[0]] + [c[0] for c in rest], axis=1)
+        np.testing.assert_array_equal(sids, ref.topk([5], k=9)[0])
+
+
+def test_server_sees_parent_store_mutation(coll, tmp_path):
+    """Satellite: cache invalidation under mutation, through serving
+    workers — a parent-process append/compact becomes visible to in-flight
+    serving traffic via Store.refresh() between micro-batches."""
+    path = str(tmp_path / "mut_store")
+    store, _ = count_to_store("list-scan", coll, path)
+    with CoocServer(path, workers=2, batch_window_ms=1.0) as server:
+        client = server.client()
+        before = client.pair_counts(np.array([[1, 2]]))[0]
+        tids, tscores = client.topk([1], k=4)
+        store.append_collection(coll, method="list-scan")  # counts double
+        after = client.pair_counts(np.array([[1, 2]]))[0]
+        assert after == 2 * before
+        store.compact()                                    # counts unchanged
+        assert client.pair_counts(np.array([[1, 2]]))[0] == after
+        ids, scores = client.topk([1], k=4)
+        ref = QueryEngine(Store.open(path))
+        np.testing.assert_array_equal(ids, ref.topk([1], k=4)[0])
+        np.testing.assert_array_equal(scores, ref.topk([1], k=4)[1])
+        assert np.all(scores[tscores >= 0] >= tscores[tscores >= 0])
+    assert sum(w["store_refreshes"] for w in server.stats["per_worker"]) >= 1
 
 
 def test_server_error_propagation_and_restart_guard(store_path):
@@ -147,11 +290,70 @@ def test_server_error_propagation_and_restart_guard(store_path):
             client.topk([10_000], k=3)
         with pytest.raises(ValueError, match="out-of-vocab"):
             client.pair_counts(np.array([[0, -2]]))
+        with pytest.raises(ValueError, match="out-of-vocab"):
+            client.neighbours(10_000)
         # healthy after an error response
         ids, _ = client.topk([1], k=3)
         assert ids.shape == (1, 3)
         with pytest.raises(RuntimeError, match="already started"):
             server.start()
+
+
+def test_client_rejects_invalid_requests_before_submit(store_path):
+    """Satellite: an unknown score (or bad k/dtype) fails at request
+    construction on the client — no envelope ever reaches a worker."""
+    with CoocServer(store_path, workers=1, batch_window_ms=0.0) as server:
+        client = server.client()
+        with pytest.raises(ValueError, match="unknown score"):
+            client.topk([1], k=3, score="bogus")
+        with pytest.raises(ValueError, match="k must be"):
+            client.topk([1], k=0)
+        with pytest.raises(ValueError, match="integer term ids"):
+            client.topk(np.array([1.5]), k=3)
+        ids, _ = client.topk([1], k=3)  # server healthy, nothing poisoned
+        assert ids.shape == (1, 3)
+    # the invalid requests never became envelopes: exactly one served
+    assert server.stats["requests"] == 1
+
+
+def test_client_buffers_bounded_after_errors_and_dropped_streams(store_path):
+    """A failed routed request or an abandoned stream must not leave the
+    client buffering its late-arriving sibling messages forever."""
+    import time as _time
+
+    with CoocServer(store_path, workers=2, batch_window_ms=1.0,
+                    routing=True) as server:
+        client = server.client()
+        # split across both workers; the OOV slice fails, the other succeeds
+        terms = np.concatenate([np.arange(16), [10_000]])
+        with pytest.raises(ValueError, match="out-of-vocab"):
+            client.topk(terms, k=3)
+        # abandon a stream after the first chunk
+        stream = client.topk_stream(np.arange(8), k=30, chunk=4)
+        next(stream)
+        stream.close()
+        # drop a stream before the first next(): __del__ must clean up
+        never_started = client.topk_stream(np.arange(4), k=20, chunk=4)
+        del never_started
+        # multi-request batch where the first request fails: the submitted
+        # sibling must be abandoned, not buffered forever
+        with pytest.raises(ValueError, match="out-of-vocab"):
+            client.execute([
+                TopKRequest([10_000], k=3),
+                PairCountsRequest(np.array([[1, 2]])),
+            ])
+        # keep serving; the dead-rid messages drain instead of accumulating
+        deadline = _time.monotonic() + 30
+        while (client._msgs or client._discard) and _time.monotonic() < deadline:
+            np.testing.assert_array_equal(
+                client.pair_counts(np.array([[1, 2]])),
+                QueryEngine(Store.open(store_path)).pair_counts(np.array([[1, 2]])),
+            )
+            _time.sleep(0.02)
+        assert not client._msgs and not client._discard
+        assert not client._positions
+        ids, _ = client.topk(np.arange(8), k=3)
+        assert ids.shape == (8, 3)
 
 
 def test_server_rejects_bad_args(store_path, tmp_path):

@@ -260,6 +260,46 @@ def test_query_engine_cache_and_invalidation(coll, tmp_path):
     assert scores[0][0] == np.sort(sym[1])[::-1][0]
 
 
+def test_query_engine_invalidation_under_mutation_in_flight(coll, tmp_path):
+    """Satellite: queries interleaved with append + compact() — the row
+    cache invalidates at each manifest bump and answers stay exact."""
+    store, _ = count_to_store("list-scan", coll, str(tmp_path / "s"))
+    eng = QueryEngine(store, cache_rows=8)
+    eng.topk([1, 2, 3], k=4)                     # warm the cache
+    pc0 = eng.pair_counts(np.array([[1, 2]]))[0]
+    store.append_collection(coll, method="list-scan")
+    mid_ids, mid_scores = eng.topk([1, 2, 3], k=4)   # in-flight: post-append
+    assert eng.pair_counts(np.array([[1, 2]]))[0] == 2 * pc0
+    store.compact()                              # same counts, new segment
+    after_ids, after_scores = eng.topk([1, 2, 3], k=4)
+    np.testing.assert_array_equal(mid_ids, after_ids)
+    np.testing.assert_array_equal(mid_scores, after_scores)
+    assert eng.pair_counts(np.array([[1, 2]]))[0] == 2 * pc0
+    # cache was rebuilt against the compacted segment, not served stale
+    assert len(store.segment_names) == 1
+
+
+def test_store_refresh_sees_sibling_process_commits(coll, tmp_path):
+    """Store.refresh(): a second Store object on the same directory (the
+    serving-worker topology) picks up append/compact commits and bumps its
+    version so engines invalidate."""
+    path = str(tmp_path / "s")
+    store, _ = count_to_store("list-scan", coll, path)
+    sibling = Store.open(path)                   # what a worker holds
+    eng = QueryEngine(sibling, cache_rows=8)
+    before = eng.pair_counts(np.array([[1, 2]]))[0]
+    assert sibling.refresh() is False            # nothing changed yet
+    store.append_collection(coll, method="list-scan")
+    assert sibling.refresh() is True
+    assert eng.pair_counts(np.array([[1, 2]]))[0] == 2 * before
+    store.compact()
+    assert sibling.refresh() is True
+    assert eng.pair_counts(np.array([[1, 2]]))[0] == 2 * before
+    ids, _ = eng.topk([1], k=3)                  # reads the compacted segment
+    ref = QueryEngine(Store.open(path))
+    np.testing.assert_array_equal(ids, ref.topk([1], k=3)[0])
+
+
 # ------------------------------------------------------------------ serving
 def test_cooc_serve_driver_smoke():
     from repro.launch.cooc_serve import serve
