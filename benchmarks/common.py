@@ -18,6 +18,14 @@ FIG1_METHODS = PAPER_METHODS + ["list-scan-segment", "multi-scan-matmul", "freq-
 MEMORY_METHODS = PAPER_METHODS + ["freq-split"]
 # §1/§4 throughput headline: the asymptotic winners + hybrid
 THROUGHPUT_METHODS = ["list-scan", "list-blocks", "freq-split"]
+# ingest (write-path) sweep: the throughput winners + the TPU list-scan
+# adaptation, end-to-end through spill → segment → Store.refresh
+INGEST_METHODS = THROUGHPUT_METHODS + ["list-scan-segment"]
+
+# document-count ladders for the ingest benchmark; each method climbs only
+# as far as its MethodSpec "ingest" bench cap allows (see ingest_scales)
+INGEST_SCALES = (2_000, 6_000, 12_000)
+INGEST_SMOKE_SCALES = (300,)
 
 
 def bench_kwargs(method: str) -> dict:
@@ -41,6 +49,16 @@ def bench_max_docs(method: str, suite: str | None = None) -> int:
 
 def needs_df_descending(method: str) -> bool:
     return REGISTRY[method].needs_df_descending
+
+
+def ingest_scales(method: str, *, smoke: bool = False) -> list[int]:
+    """Document-count ladder for the ingest benchmark — the shared
+    ``INGEST_SCALES`` table truncated by the method's MethodSpec bench
+    metadata (``bench_caps["ingest"]``, falling back to ``bench_max_docs``),
+    the same single source of truth the figure benchmarks use."""
+    base = INGEST_SMOKE_SCALES if smoke else INGEST_SCALES
+    cap = bench_max_docs(method, "ingest")
+    return [s for s in base if s <= cap]
 
 
 def time_call(fn, *args, repeats: int = 1, **kwargs):

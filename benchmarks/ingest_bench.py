@@ -1,0 +1,239 @@
+"""Ingest-throughput benchmark: end-to-end docs/hour for the write path.
+
+The paper's headline claim is ingest throughput — "several hundred thousand
+documents per hour" — and this benchmark is its perf-trajectory artifact
+(``BENCH_ingest.json``): for every method in ``benchmarks.common.
+INGEST_METHODS``, at every scale its MethodSpec bench metadata allows, one
+timed end-to-end build of the full write path:
+
+    count → SpillSink (radix bucket runs) → per-bucket merge
+          → CSR segment (two-pass symmetric build) → Store.refresh()
+
+The clock stops only when a *second* store handle has picked the new segment
+up via ``Store.refresh()`` — visibility included, exactly what a serving
+deployment experiences.
+
+Two gates ride along (CI fails if either regresses):
+
+* the vectorized ``list-scan`` must beat the pre-vectorization per-doc-loop
+  baseline (``count_list_scan_loop``) in docs/hour — ≥ 1× on the smoke
+  corpus, ≥ 2.5× on the full benchmark corpus (the gate sits below the
+  measured trajectory, which records > 3× at the top scale, so machine
+  noise doesn't read as a regression);
+* every plain-collection method's segment must be **byte-identical** to the
+  loop baseline's (cols/counts/row_ptr and the symmetric arrays) — the
+  throughput numbers are exactness-gated, not just fast.
+
+    PYTHONPATH=src:. python benchmarks/ingest_bench.py --json BENCH_ingest.json
+    PYTHONPATH=src:. python benchmarks/ingest_bench.py --smoke --json BENCH_ingest.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import filecmp
+import json
+import os
+import shutil
+import tempfile
+import time
+
+from benchmarks.common import (
+    INGEST_METHODS,
+    bench_kwargs,
+    ingest_scales,
+    needs_df_descending,
+)
+from repro.core.cooc import count
+from repro.core.list_scan import count_list_scan_loop
+from repro.data.corpus import synthetic_zipf_collection
+from repro.store import SpillSink, Store
+
+# a dense WT10G-like slice: long documents over the counted (frequent-term)
+# vocabulary, so distinct pairs saturate toward V²/2 while pair occurrences
+# keep growing with scale — the regime where the counting hot loop dominates
+# the write path, as in the paper's headline runs
+VOCAB = 4_096
+MEAN_LEN = 120
+SMOKE_VOCAB = 2_048
+SMOKE_MEAN_LEN = 40
+BUDGET_PAIRS = 1 << 20  # far below full-scale distinct pairs -> real spills
+SEED = 9
+
+# the segment arrays that must match across methods (byte-for-byte)
+_SEGMENT_ARRAYS = (
+    "row_ptr.bin", "cols.bin", "counts.bin",
+    "sym_row_ptr.bin", "sym_cols.bin", "sym_counts.bin",
+)
+
+
+def _build_once(fn, c, workdir: str, budget: int, label: str, **kwargs) -> dict:
+    """One timed end-to-end ingest: count through a budgeted SpillSink into a
+    fresh store, stop the clock when a second handle sees the segment."""
+    store_dir = os.path.join(workdir, f"store_{label}")
+    store = Store.create(store_dir, c.vocab_size)
+    reader = Store.open(store_dir)  # the "serving" handle, opened up front
+    t0 = time.perf_counter()
+    with SpillSink(c.vocab_size, memory_budget_pairs=budget) as sink:
+        fn(c, sink, **kwargs)
+        spill_stats = dict(sink.stats)
+        seg = store.add_segment_from_sink(
+            sink, num_docs=c.num_docs, source=label
+        )
+    visible = reader.refresh()
+    elapsed = time.perf_counter() - t0
+    assert visible, "reader handle did not observe the manifest commit"
+    assert reader.segments[-1].nnz == seg.nnz, "refreshed segment mismatch"
+    return {
+        "docs": c.num_docs,
+        "build_s": round(elapsed, 3),
+        "docs_per_hour": round(c.num_docs / elapsed * 3600),
+        "nnz": int(seg.nnz),
+        "spills": spill_stats["spills"],
+        "bucket_runs": spill_stats["bucket_runs"],
+        "segment_dir": seg.path,
+    }
+
+
+def _segments_identical(dir_a: str, dir_b: str) -> bool:
+    return all(
+        filecmp.cmp(
+            os.path.join(dir_a, name), os.path.join(dir_b, name), shallow=False
+        )
+        for name in _SEGMENT_ARRAYS
+    )
+
+
+def run_ingest(
+    json_path: str | None = None,
+    *,
+    smoke: bool = False,
+    vocab: int | None = None,
+    mean_len: int | None = None,
+    budget: int = BUDGET_PAIRS,
+    seed: int = SEED,
+) -> dict:
+    vocab = vocab or (SMOKE_VOCAB if smoke else VOCAB)
+    mean_len = mean_len or (SMOKE_MEAN_LEN if smoke else MEAN_LEN)
+    # regression gates, deliberately below the measured trajectory (the
+    # committed BENCH_ingest.json records >=3x at the top scale) so a noisy
+    # or slower machine doesn't flag a regression that isn't there
+    min_speedup = 1.0 if smoke else 2.5
+    workdir = tempfile.mkdtemp(prefix="ingest_bench_")
+    try:
+        return _run_ingest_in(
+            workdir, json_path, smoke=smoke, vocab=vocab,
+            mean_len=mean_len, budget=budget, seed=seed,
+            min_speedup=min_speedup,
+        )
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+def _run_ingest_in(
+    workdir: str,
+    json_path: str | None,
+    *,
+    smoke: bool,
+    vocab: int,
+    mean_len: int,
+    budget: int,
+    seed: int,
+    min_speedup: float,
+) -> dict:
+
+    # every scale any method will climb to (the loop baseline runs at each of
+    # list-scan's scales so the speedup gate has a same-scale denominator)
+    scales = sorted({
+        s for m in INGEST_METHODS for s in ingest_scales(m, smoke=smoke)
+    })
+    collections = {
+        s: synthetic_zipf_collection(s, vocab=vocab, mean_len=mean_len, seed=seed)
+        for s in scales
+    }
+
+    entries: list[dict] = []
+    baseline_dirs: dict[int, str] = {}  # scale -> loop baseline segment dir
+    baseline_dph: dict[int, int] = {}
+    for s in ingest_scales("list-scan", smoke=smoke):
+        e = _build_once(
+            count_list_scan_loop, collections[s], workdir, budget,
+            f"list-scan-loop_{s}",
+        )
+        e["method"] = "list-scan-loop"
+        baseline_dirs[s] = e.pop("segment_dir")
+        baseline_dph[s] = e["docs_per_hour"]
+        entries.append(e)
+
+    speedups: dict[str, float] = {}
+    for method in INGEST_METHODS:
+        df_desc = needs_df_descending(method)
+        kwargs = bench_kwargs(method)
+        for s in ingest_scales(method, smoke=smoke):
+            c = collections[s]
+            if df_desc:
+                from repro.data.preprocess import remap_df_descending
+
+                c, _ = remap_df_descending(c)
+            e = _build_once(
+                lambda cc, sink, **kw: count(method, cc, sink, **kw)[1],
+                c, workdir, budget, f"{method}_{s}", **kwargs,
+            )
+            e["method"] = method
+            seg_dir = e.pop("segment_dir")
+            if not df_desc and s in baseline_dirs:
+                # exactness gate: identical bytes to the loop baseline
+                assert _segments_identical(seg_dir, baseline_dirs[s]), (
+                    f"{method} segment at {s} docs differs from the "
+                    "list-scan-loop oracle"
+                )
+                e["identical_to_loop_baseline"] = True
+            if method == "list-scan" and s in baseline_dph:
+                speedups[str(s)] = round(
+                    e["docs_per_hour"] / baseline_dph[s], 2
+                )
+            entries.append(e)
+
+    top_scale = str(max(int(k) for k in speedups))
+    out = {
+        "suite": "ingest",
+        "config": {
+            "vocab": vocab, "mean_len": mean_len, "budget_pairs": budget,
+            "seed": seed, "smoke": smoke, "scales": scales,
+        },
+        "entries": entries,
+        "list_scan_speedup_vs_loop": speedups,
+        "gate": {
+            "min_speedup": min_speedup,
+            "measured": speedups[top_scale],
+            "at_docs": int(top_scale),
+        },
+    }
+    if json_path:  # write before gating so CI uploads the failing numbers too
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[ingest bench] wrote {json_path}")
+    # the regression gate: vectorized list-scan must beat the loop baseline
+    assert speedups[top_scale] >= min_speedup, (
+        f"vectorized list-scan is only {speedups[top_scale]}x the per-doc "
+        f"loop baseline at {top_scale} docs (gate: >= {min_speedup}x)"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=run_ingest.__doc__)
+    ap.add_argument("--json", default=None,
+                    help="write BENCH_ingest.json here (default: stdout)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus + >=1x gate (the CI configuration)")
+    ap.add_argument("--vocab", type=int, default=None)
+    ap.add_argument("--mean-len", type=int, default=None)
+    ap.add_argument("--budget", type=int, default=BUDGET_PAIRS)
+    args = ap.parse_args()
+    result = run_ingest(
+        args.json, smoke=args.smoke, vocab=args.vocab,
+        mean_len=args.mean_len, budget=args.budget,
+    )
+    if not args.json:
+        print(json.dumps(result, indent=2))

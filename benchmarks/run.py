@@ -9,7 +9,9 @@
 #   store    — store build + query serving (exactness-gated vs naive oracle)
 #
 # The serving benchmark (p50/p99/QPS JSON, in-process vs multi-worker) has
-# its own CLI: `python benchmarks/store_bench.py --json BENCH_serving.json`.
+# its own CLI: `python benchmarks/store_bench.py --json BENCH_serving.json`,
+# as does the ingest write-path benchmark (docs/hour JSON, loop-baseline
+# regression gate): `python benchmarks/ingest_bench.py --json BENCH_ingest.json`.
 
 from __future__ import annotations
 

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.types import PairSink
+from repro.core.types import PairSink, emit_dense_rows
 from repro.data.corpus import Collection
 from repro.data.index import build_inverted_index, incidence_bitpacked
 
@@ -75,10 +75,5 @@ def count_list_pairs_bitpacked(
 
 
 def _emit_tile(tile: np.ndarray, row_lo: int, col_lo: int, sink: PairSink) -> None:
-    for r in range(tile.shape[0]):
-        primary = row_lo + r
-        row = tile[r]
-        nz = np.nonzero(row)[0]
-        nz = nz[nz + col_lo > primary]
-        if len(nz):
-            sink.emit_row(primary, nz + col_lo, row[nz])
+    """One tile-level nonzero + per-row split (was a per-row Python loop)."""
+    emit_dense_rows(tile, sink, row_lo=row_lo, col_lo=col_lo)

@@ -11,18 +11,127 @@ Observation used by the TPU path: the accumulator row is a *histogram* —
 C[i, :] = Σ_{d ∈ postings(i)} B[d, :] — i.e. a bincount over the concatenated
 forward documents of postings(i), masked to j > i. That maps directly onto
 ``jax.ops.segment_sum`` / one-hot scatter (kernels/segment_cooc.py).
+
+The CPU hot path uses the same observation: primaries are processed in
+batches, their forward documents gathered into one flat token stream with a
+fancy-index (no per-document Python loop), and the whole batch is counted by
+a single ``np.bincount`` over packed (slot, token) keys. The pre-vectorization
+per-document loop survives as ``count_list_scan_loop`` — the ingest
+benchmark's baseline and the byte-identity oracle for the batched path.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.types import PairSink
+from repro.core.types import PairSink, emit_dense_rows, group_bounds
 from repro.data.corpus import Collection
-from repro.data.index import build_inverted_index
+from repro.data.index import InvertedIndex, build_inverted_index
 
 
-def count_list_scan(c: Collection, sink: PairSink) -> dict:
+def _batch_tokens(
+    c: Collection, inv: InvertedIndex, lo: int, hi: int
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Flat strict-upper token stream for primaries [lo, hi).
+
+    Returns ``(tokens, owners, docs_gathered)``: for every posting of every
+    primary in the batch, the suffix of the forward document *after* the
+    primary itself (per-doc terms are sorted unique, so the suffix is exactly
+    the secondaries j > i). ``owners[k]`` is the primary that pulled
+    ``tokens[k]`` in. One fancy-index gather — no per-document Python loop,
+    no post-hoc masking; memory is O(batch pair occurrences).
+    """
+    t0, t1 = inv.term_ptr[lo], inv.term_ptr[hi]
+    docs = inv.docs[t0:t1].astype(np.int64)
+    owners = np.repeat(
+        np.arange(lo, hi, dtype=np.int32), np.diff(inv.term_ptr[lo:hi + 1])
+    )
+    starts = inv.positions[t0:t1] + 1  # one past the primary's own slot
+    lens = c.doc_ptr[docs + 1] - starts
+    offs = np.zeros(len(docs) + 1, dtype=np.int64)
+    np.cumsum(lens, out=offs[1:])
+    # flat[k] walks each doc's suffix slice back-to-back; int32 throughout —
+    # the gather feeds ~len² tokens per doc, so halving element width is a
+    # straight halving of the hot loop's memory traffic
+    # int32 needs every flat index AND the batch token count in range: the
+    # arange runs over offs[-1] (gathered tokens this batch), the offsets
+    # over c.terms positions — both must fit
+    idx_dtype = (
+        np.int32
+        if int(c.doc_ptr[-1]) < 2**31 and int(offs[-1]) < 2**31
+        else np.int64
+    )
+    flat = np.arange(offs[-1], dtype=idx_dtype) + np.repeat(
+        (starts - offs[:-1]).astype(idx_dtype), lens
+    )
+    tokens = c.terms[flat]  # stays int32
+    return tokens, np.repeat(owners, lens), len(docs)
+
+
+def count_list_scan(
+    c: Collection, sink: PairSink, *, rows_per_batch: int = 64
+) -> dict:
+    """Vectorized LIST-SCAN: one batched histogram per primary batch.
+
+    Each batch's flat (primary, token) stream is aggregated in one shot —
+    ``np.bincount`` over packed keys when the batch grid is dense enough to
+    pay for an O(rows · V) histogram, otherwise a single sort over the packed
+    keys (work proportional to the batch's pair occurrences, not to V — the
+    winning regime on the hyper-sparse vocabulary tail).
+
+    Byte-identical to ``count_list_scan_loop`` (asserted in tests and by the
+    ingest benchmark); the traversal order and emitted rows are exactly the
+    paper's, only the per-document accumulation is batched.
+    """
+    inv = build_inverted_index(c)
+    V = c.vocab_size
+    docs_scanned = 0
+    # sinks exposing the batch fast path (SpillSink) take each batch's
+    # aggregated packed keys whole — no per-row splitting at all
+    emit_keys = getattr(sink, "emit_keys", None)
+    for lo in range(0, V, rows_per_batch):
+        hi = min(lo + rows_per_batch, V)
+        tokens, owners, n_docs = _batch_tokens(c, inv, lo, hi)
+        docs_scanned += n_docs
+        if len(tokens) == 0:
+            continue
+        if (hi - lo) * V < 2**31:
+            # batch-relative keys fit int32: half the sort/bincount traffic
+            keys = (owners - np.int32(lo)) * np.int32(V) + tokens
+        else:
+            keys = (owners.astype(np.int64) - lo) * V + tokens
+        if len(keys) * 4 >= (hi - lo) * V:
+            # dense batch: one bincount histogram over the (rows, V) grid
+            counts = np.bincount(keys, minlength=(hi - lo) * V).astype(
+                np.int64, copy=False
+            )
+            if emit_keys is not None:
+                nz = np.nonzero(counts)[0]
+                emit_keys(nz + np.int64(lo) * V, counts[nz])
+            else:
+                emit_dense_rows(counts.reshape(hi - lo, V), sink, row_lo=lo)
+        else:
+            # sparse batch: sort-aggregate the packed keys, skip the grid
+            keys.sort()
+            bounds = group_bounds(keys)
+            uniq = keys[bounds[:-1]]
+            counts = np.diff(bounds)
+            if emit_keys is not None:
+                emit_keys(uniq.astype(np.int64) + np.int64(lo) * V, counts)
+                continue
+            rows = uniq // V
+            rb = group_bounds(rows)
+            for s, e in zip(rb[:-1], rb[1:]):
+                sink.emit_row(lo + int(rows[s]), uniq[s:e] % V, counts[s:e])
+    return {"docs_scanned": docs_scanned}
+
+
+def count_list_scan_loop(c: Collection, sink: PairSink) -> dict:
+    """Pre-vectorization reference: per-document ``acc[sec] += 1`` loop.
+
+    Kept (unregistered) as the ingest benchmark's docs/hour baseline and as
+    the byte-identity oracle for the batched histogram path above.
+    """
     inv = build_inverted_index(c)
     V = c.vocab_size
     docs_scanned = 0
@@ -49,8 +158,9 @@ def count_list_scan_segment(
 ) -> dict:
     """TPU-adapted LIST-SCAN: batched histogram accumulation.
 
-    Gathers the forward documents for a batch of primary terms, flattens them
-    into (ids, segment) streams and performs one batched histogram per batch
+    Gathers the forward documents for a batch of primary terms (same flat
+    ``_batch_tokens`` gather as the CPU path), flattens them into
+    (ids, segment) streams and performs one batched histogram per batch
     via kernels/segment_cooc.py (Pallas onehot-matmul histogram on TPU;
     segment_sum oracle with ``use_kernel=False``). Work is proportional to
     actual postings (no empty tiles), which is why this path wins on the
@@ -63,28 +173,16 @@ def count_list_scan_segment(
     batches = 0
     for lo in range(0, V, rows_per_batch):
         hi = min(lo + rows_per_batch, V)
-        ids_chunks, seg_chunks = [], []
-        for slot, i in enumerate(range(lo, hi)):
-            post = inv.postings(i)
-            if len(post) == 0:
-                continue
-            ts = np.concatenate([c.doc(int(d)) for d in post])
-            ts = ts[ts > i]  # strict-upper secondaries only
-            if len(ts):
-                ids_chunks.append(ts.astype(np.int32))
-                seg_chunks.append(np.full(len(ts), slot, dtype=np.int32))
-        if not ids_chunks:
+        tokens, owners, _ = _batch_tokens(c, inv, lo, hi)
+        if len(tokens) == 0:
             continue
-        ids = np.concatenate(ids_chunks)
-        seg = np.concatenate(seg_chunks)
+        ids = tokens
+        seg = (owners - np.int32(lo)).astype(np.int32)
         counts = np.asarray(
             kops.segment_hist(
                 ids, seg, num_rows=hi - lo, vocab=V, use_kernel=use_kernel
             )
         )
         batches += 1
-        for slot in range(hi - lo):
-            nz = np.nonzero(counts[slot])[0]
-            if len(nz):
-                sink.emit_row(lo + slot, nz, counts[slot][nz].astype(np.int64))
+        emit_dense_rows(counts.astype(np.int64), sink, row_lo=lo)
     return {"row_batches": batches}

@@ -469,11 +469,34 @@ class PlanExecutor:
     def _finalize_spill(
         self, plan: Plan, spill_root: str, result: ExecutionResult
     ) -> None:
-        from repro.store.builder import _iter_run, merge_row_streams
+        from repro.store.builder import merge_bucket_runs
 
         job = plan.job
         runs = sorted(glob.glob(os.path.join(spill_root, "shard_*", "run_*.bin")))
-        merged = merge_row_streams([_iter_run(p) for p in runs])
+        # bucket runs (run_<spill>_b<bucket>.bin) cover disjoint ascending
+        # primary ranges: merge bucket by bucket — in memory when the bucket
+        # fits the merge cap, via a heap spanning only that bucket's runs
+        # across shards otherwise — never a global k-way over every run file
+        by_bucket: dict[int, list[str]] = {}
+        legacy = False
+        for p in runs:
+            name = os.path.basename(p)
+            if "_b" not in name:
+                legacy = True  # pre-bucketing run file (resumed old spill dir)
+                break
+            b = int(name.rsplit("_b", 1)[1].split(".")[0])
+            by_bucket.setdefault(b, []).append(p)
+        if legacy:
+            # unbucketed runs span the whole primary range: only a global
+            # k-way merge is order-correct for them
+            from repro.store.builder import _iter_run, merge_row_streams
+
+            merged = merge_row_streams([_iter_run(p) for p in runs])
+        else:
+            merged = merge_bucket_runs(
+                by_bucket, plan.job.collection.vocab_size,
+                cap_pairs=4 * job.memory_budget_pairs,
+            )
 
         tally = {"distinct_pairs": 0, "total_count": 0}
 

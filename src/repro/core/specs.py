@@ -300,12 +300,16 @@ def _build_registry() -> None:
         params=(_P("block_size", int, None, minimum=1, allow_none=True,
                    doc="lists per block; default ≈ √V (paper's choice)"),),
         cost=cost_list_blocks, memory_bytes=mem_list_blocks,
+        bench_caps={"ingest": 2000},
         doc="block-pair-order traversal, b ≈ √V blocks (§2)",
     ))
     register(MethodSpec(
         "list-scan", count_list_scan, "paper",
+        params=(_P("rows_per_batch", int, 64, minimum=1,
+                   doc="primaries per batched bincount histogram"),),
         cost=cost_list_scan, memory_bytes=mem_list_scan,
-        doc="term-order inverted+forward traversal (§2); best asymptotics",
+        doc="term-order inverted+forward traversal (§2); best asymptotics, "
+            "batched-histogram hot loop",
     ))
     register(MethodSpec(
         "multi-scan", count_multi_scan, "paper",
@@ -334,6 +338,7 @@ def _build_registry() -> None:
         params=(_P("rows_per_batch", int, 64, minimum=1), use_kernel),
         cost=_tpu_discount(cost_list_scan), memory_bytes=mem_list_scan,
         bench_overrides={"use_kernel": False},
+        bench_caps={"ingest": 500},  # segment_sum oracle is slow off-TPU
         doc="LIST-SCAN as batched segment histograms",
     ))
     register(MethodSpec(

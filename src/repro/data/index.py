@@ -21,8 +21,12 @@ from repro.data.corpus import Collection
 
 @dataclasses.dataclass(frozen=True)
 class InvertedIndex:
-    term_ptr: np.ndarray  # int64[V+1]
-    docs: np.ndarray      # int32[nnz] — ascending doc IDs per term
+    term_ptr: np.ndarray   # int64[V+1]
+    docs: np.ndarray       # int32[nnz] — ascending doc IDs per term
+    positions: np.ndarray  # int[nnz] — flat index into c.terms of each
+                           # posting's occurrence (positions[k] locates the
+                           # term of posting k inside its forward document);
+                           # int32 whenever the posting count allows
 
     @property
     def vocab_size(self) -> int:
@@ -39,7 +43,10 @@ def build_inverted_index(c: Collection) -> InvertedIndex:
     """One pass over the forward index (the paper's "first pass").
 
     Stable counting-sort by term ID keeps doc IDs ascending inside each
-    posting list (documents are visited in doc order).
+    posting list (documents are visited in doc order). The sort permutation
+    itself is kept as ``positions``: it maps each posting back to its flat
+    offset in ``c.terms``, which is what lets LIST-SCAN gather the
+    strict-upper suffix of every forward document without re-searching it.
     """
     df = np.bincount(c.terms, minlength=c.vocab_size).astype(np.int64)
     term_ptr = np.zeros(c.vocab_size + 1, dtype=np.int64)
@@ -48,7 +55,8 @@ def build_inverted_index(c: Collection) -> InvertedIndex:
         np.arange(c.num_docs, dtype=np.int32), np.diff(c.doc_ptr)
     )
     order = np.argsort(c.terms, kind="stable")
-    return InvertedIndex(term_ptr, doc_ids[order].astype(np.int32))
+    positions = order.astype(np.int32) if len(c.terms) < 2**31 else order
+    return InvertedIndex(term_ptr, doc_ids[order].astype(np.int32), positions)
 
 
 def incidence_dense(

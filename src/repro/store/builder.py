@@ -4,13 +4,18 @@
 method in ``core/cooc.py`` (and any per-shard worker of
 ``core/distributed.py``) can stream its output here instead of into a dense
 V×V matrix. Rows are buffered as packed int64 pair keys under a configurable
-memory budget; when the budget is hit, the buffer is sorted, duplicate pairs
-are aggregated, and the result is spilled to disk as a sorted run in the
-paper's binary pair format (§2 NAÏVE's "sorted runs + merge" discipline,
-generalized to every method). Finalization k-way-merges all runs plus the
-live buffer into an immutable CSR segment. Counting and merging stay within
-O(budget) memory regardless of the distinct-pair count; the one O(nnz)
-step left is the segment's symmetric-adjacency derivation (see
+memory budget; when the budget is hit, the buffer is **radix-partitioned**
+by primary range (``primary >> pshift`` — at most 256 buckets spanning the
+vocabulary), each small bucket is sorted and aggregated independently, and
+every nonempty bucket is spilled as its own sorted run in the paper's binary
+pair format (§2 NAÏVE's "sorted runs + merge" discipline, generalized to
+every method). Because bucket boundaries align with primary ranges,
+finalization merges run files *per bucket* — the k-way heap only ever spans
+one bucket's runs — instead of one global merge over every run, and the
+buffer, its bucket tags, and the partition scratch are all preallocated once
+and reused across spills. Counting, spilling, and merging stay within
+O(budget) memory regardless of the distinct-pair count; the segment's
+symmetric-adjacency derivation is likewise external-memory (see
 csr_store._write_symmetric).
 """
 
@@ -23,17 +28,25 @@ import tempfile
 
 import numpy as np
 
-from repro.core.types import FileSink, iter_pair_file
+from repro.core.types import group_bounds, iter_pair_file
+
+# radix partition width: at most 2^BUCKET_BITS primary-range buckets
+BUCKET_BITS = 8
 
 
 def sum_by_key(keys: np.ndarray, cnts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """Aggregate duplicate keys: returns (sorted unique keys, summed int64
     counts). The one aggregation primitive behind spilling, run merging, and
-    multi-segment neighbourhood merging."""
+    multi-segment neighbourhood merging. One stable sort; duplicate-group
+    boundaries come from a ``diff`` over the sorted keys (``np.unique`` would
+    sort a second time)."""
+    cnts = np.asarray(cnts, dtype=np.int64)
+    if len(keys) == 0:
+        return np.asarray(keys, dtype=np.int64).copy(), cnts.copy()
     order = np.argsort(keys, kind="stable")
-    keys, cnts = keys[order], np.asarray(cnts, dtype=np.int64)[order]
-    uniq, start = np.unique(keys, return_index=True)
-    return uniq, np.add.reduceat(cnts, start)
+    keys, cnts = keys[order], cnts[order]
+    starts = group_bounds(keys)[:-1]
+    return keys[starts], np.add.reduceat(cnts, starts)
 
 
 def _iter_run(path: str):
@@ -41,6 +54,101 @@ def _iter_run(path: str):
     strictly ascending within a run)."""
     for primary, secs, cnts in iter_pair_file(path):
         yield int(primary), secs.astype(np.int64), cnts.astype(np.int64)
+
+
+def _write_run(path: str, keys: np.ndarray, cnts: np.ndarray, V: int) -> None:
+    """Write sorted unique packed keys as one run file (paper binary format)
+    in a single ``tofile`` — the whole file image is assembled with two
+    scatter assignments instead of per-row struct packing + writes."""
+    prims = keys // V
+    bounds = group_bounds(prims)
+    starts = bounds[:-1]
+    ns = np.diff(bounds)
+    npairs = len(keys)
+    nrows = len(starts)
+    out = np.empty(2 * nrows + 2 * npairs, dtype=np.uint32)
+    # record r sits after r headers and pairs_before(r) tuples (2 words each)
+    hdr = 2 * np.arange(nrows, dtype=np.int64) + 2 * starts
+    out[hdr] = prims[starts]
+    out[hdr + 1] = ns
+    # pair p of row r(p) lands at 2·r(p) + 2 + 2·p
+    rpp = np.repeat(np.arange(nrows, dtype=np.int64), ns)
+    sec_pos = 2 * rpp + 2 + 2 * np.arange(npairs, dtype=np.int64)
+    out[sec_pos] = keys % V
+    out[sec_pos + 1] = cnts
+    out.tofile(path)
+
+
+def _load_run(path: str, V: int) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized whole-run parse: one ``np.fromfile`` plus an O(rows)
+    header walk, returning the run's (packed int64 keys, int64 counts) —
+    sorted unique, exactly as spilled. The per-pair struct unpacking of
+    ``iter_pair_file`` is the merge phase's Python hot spot; this replaces
+    it with three fancy-index gathers."""
+    words = np.fromfile(path, dtype=np.uint32)
+    if len(words) == 0:
+        return np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64)
+    offs = []
+    k = 0
+    while k < len(words):  # one step per row, not per pair
+        offs.append(k)
+        k += 2 + 2 * int(words[k + 1])
+    offs = np.asarray(offs, dtype=np.int64)
+    prim = words[offs].astype(np.int64)
+    ns = words[offs + 1].astype(np.int64)
+    lens = 2 * ns
+    pos = np.zeros(len(offs) + 1, dtype=np.int64)
+    np.cumsum(lens, out=pos[1:])
+    idx = np.arange(pos[-1], dtype=np.int64) + np.repeat(offs + 2 - pos[:-1], lens)
+    tup = words[idx]
+    keys = np.repeat(prim, ns) * V + tup[0::2]
+    return keys, tup[1::2].astype(np.int64)
+
+
+def merge_bucket_runs(by_bucket, V: int, *, cap_pairs: int, live=None):
+    """Merged (primary, secondaries, counts) rows across bucket-partitioned
+    runs, walking buckets in ascending order (buckets cover disjoint
+    ascending primary ranges, so concatenation is globally sorted).
+
+    A bucket whose total pairs fit ``cap_pairs`` is merged **in memory** —
+    every run loaded with the vectorized ``_load_run``, one ``sum_by_key``
+    — which is the common case by construction (a bucket holds ~1/256 of
+    the key space). Oversized buckets fall back to the streaming k-way heap
+    merge, so memory stays O(cap_pairs) no matter how skewed the keys are.
+
+    ``by_bucket`` maps bucket -> [run paths]; ``live`` (optional) maps
+    bucket -> (sorted unique keys, counts) for a sink's unspilled buffer.
+    """
+    live = dict(live or {})
+    for b in sorted(set(by_bucket) | set(live)):
+        paths = by_bucket.get(b, [])
+        lk = live.pop(b, None)
+        # run bytes = 8·pairs + 8·rows, so size//8 never underestimates
+        est = sum(os.path.getsize(p) // 8 for p in paths)
+        est += len(lk[0]) if lk else 0
+        if est <= cap_pairs:
+            parts = [_load_run(p, V) for p in paths]
+            if lk is not None:
+                parts.append(lk)
+            if len(parts) == 1:
+                keys, cnts = parts[0]  # a lone run is already aggregated
+            else:
+                keys = np.concatenate([p[0] for p in parts])
+                cnts = np.concatenate([p[1] for p in parts])
+                # a term-order producer (LIST-SCAN) emits globally ascending
+                # keys, so consecutive spills cover disjoint ascending
+                # ranges: one diff check replaces the whole merge sort
+                if not bool((np.diff(keys) > 0).all()):
+                    keys, cnts = sum_by_key(keys, cnts)
+            yield from _rows_from_sorted_keys(keys, cnts, V)
+        else:
+            streams = [_iter_run(p) for p in paths]
+            if lk is not None:
+                streams.append(_rows_from_sorted_keys(lk[0], lk[1], V))
+            if len(streams) == 1:
+                yield from streams[0]
+            else:
+                yield from merge_row_streams(streams)
 
 
 def merge_row_streams(streams):
@@ -83,17 +191,16 @@ def _rows_from_sorted_keys(keys: np.ndarray, cnts: np.ndarray, V: int):
         return
     primaries = keys // V
     secondaries = keys % V
-    starts = np.concatenate(
-        [[0], np.nonzero(np.diff(primaries))[0] + 1, [len(keys)]]
-    )
-    for s, e in zip(starts[:-1], starts[1:]):
-        if e > s:
-            yield int(primaries[s]), secondaries[s:e], cnts[s:e]
+    bounds = group_bounds(primaries)
+    for s, e in zip(bounds[:-1], bounds[1:]):
+        yield int(primaries[s]), secondaries[s:e], cnts[s:e]
 
 
 class SpillSink:
     """PairSink that spills sorted aggregated runs to disk under a memory
-    budget (measured in buffered pair entries, ~16 bytes each)."""
+    budget (measured in buffered pair entries; the live buffer costs 18
+    bytes per budgeted pair — packed key, count, bucket tag — plus, on the
+    first unsorted spill only, 16 bytes per pair of partition scratch)."""
 
     def __init__(
         self,
@@ -109,37 +216,130 @@ class SpillSink:
         self._own_dir = spill_dir is None
         self.spill_dir = spill_dir or tempfile.mkdtemp(prefix="cooc_spill_")
         os.makedirs(self.spill_dir, exist_ok=True)
-        self.runs: list[str] = []
-        self._keys: list[np.ndarray] = []
-        self._cnts: list[np.ndarray] = []
+        # primary-range radix: bucket = primary >> pshift, <= 2^BUCKET_BITS
+        # buckets spanning the vocabulary
+        self._pshift = max(0, int(vocab_size).bit_length() - BUCKET_BITS)
+        self.num_buckets = ((max(vocab_size, 1) - 1) >> self._pshift) + 1
+        # run files, as (bucket, path); every run holds one bucket's primary
+        # range, sorted — finalization merges runs bucket by bucket
+        self.runs: list[tuple[int, str]] = []
+        self._spills = 0
+        # scratch reused across the sink's whole life: the live buffer, its
+        # bucket tags, and the partition output (filled by np.take)
+        cap = memory_budget_pairs
+        self._buf_keys = np.empty(cap, dtype=np.int64)
+        self._buf_cnts = np.empty(cap, dtype=np.int64)
+        self._buf_bkt = np.empty(cap, dtype=np.uint16)
+        # partition scratch is only needed on the unsorted spill path —
+        # allocated on first use (term-order producers never pay for it)
+        self._part_keys: np.ndarray | None = None
+        self._part_cnts: np.ndarray | None = None
         self._buffered = 0
-        self.stats = {"spills": 0, "pairs_in": 0, "spilled_bytes": 0}
+        # term-order producers (LIST-SCAN and friends) emit strictly
+        # ascending keys; while the streak holds, spilling skips the radix
+        # argsort + aggregation entirely (searchsorted bucket split instead)
+        self._buf_sorted = True
+        self._last_key = -1
+        self.stats = {"spills": 0, "pairs_in": 0, "spilled_bytes": 0,
+                      "bucket_runs": 0, "sorted_spills": 0}
 
     # ------------------------------------------------------ PairSink API
+    def _reserve(self, n: int) -> int:
+        """Make room for ``n`` entries. Returns the buffer write offset, or
+        -1 for an oversize emission (larger than the whole buffer) that the
+        caller must hand to ``_oversize`` instead."""
+        if n > len(self._buf_keys) - self._buffered:
+            self._spill()
+        return -1 if n > len(self._buf_keys) else self._buffered
+
+    def _commit(self, u: int, n: int) -> None:
+        """Account for ``n`` entries just packed at offset ``u``: advance the
+        buffer, update the ascending-emission streak, count the pairs."""
+        self._buffered = u + n
+        self._note_keys(self._buf_keys[u:u + n])
+        self.stats["pairs_in"] += n
+
+    def _oversize(self, keys, counts, bkt) -> None:
+        """Partition an oversize emission straight to run files."""
+        self._partition_spill(keys, np.asarray(counts), bkt)
+        self.stats["pairs_in"] += len(keys)
+
     def emit_row(self, primary, secondaries, counts):
-        if len(secondaries) == 0:
+        """Row-order emission: keys are packed straight into the preallocated
+        buffer (no intermediate int64 copies of ``secondaries``/``counts``)."""
+        n = len(secondaries)
+        if n == 0:
             return
-        keys = np.int64(primary) * self.vocab_size + np.asarray(
-            secondaries, dtype=np.int64
-        )
-        self._push(keys, counts)
+        u = self._reserve(n)
+        if u < 0:
+            keys = np.int64(primary) * self.vocab_size + np.asarray(
+                secondaries, dtype=np.int64
+            )
+            bkt = np.full(n, primary >> self._pshift, dtype=np.uint16)
+            self._oversize(keys, counts, bkt)
+            return
+        buf = self._buf_keys[u:u + n]
+        np.add(secondaries, np.int64(primary) * self.vocab_size, out=buf)
+        self._buf_cnts[u:u + n] = counts
+        self._buf_bkt[u:u + n] = primary >> self._pshift
+        self._commit(u, n)
 
     def emit_col(self, secondary, primaries, counts):
         """Column-order emission (FREQ-SPLIT tail path)."""
-        if len(primaries) == 0:
+        n = len(primaries)
+        if n == 0:
             return
-        keys = np.asarray(primaries, dtype=np.int64) * self.vocab_size + np.int64(
-            secondary
-        )
-        self._push(keys, counts)
+        primaries = np.asarray(primaries)
+        u = self._reserve(n)
+        if u < 0:
+            keys = primaries.astype(np.int64) * self.vocab_size + np.int64(
+                secondary
+            )
+            bkt = (primaries >> self._pshift).astype(np.uint16)
+            self._oversize(keys, counts, bkt)
+            return
+        buf = self._buf_keys[u:u + n]
+        np.multiply(primaries, np.int64(self.vocab_size), out=buf)
+        np.add(buf, np.int64(secondary), out=buf)
+        self._buf_cnts[u:u + n] = counts
+        np.right_shift(primaries, self._pshift, out=self._buf_bkt[u:u + n],
+                       casting="unsafe")
+        self._commit(u, n)
 
-    def _push(self, keys: np.ndarray, counts) -> None:
-        self._keys.append(keys)
-        self._cnts.append(np.asarray(counts, dtype=np.int64))
-        self._buffered += len(keys)
-        self.stats["pairs_in"] += len(keys)
-        if self._buffered >= self.memory_budget_pairs:
-            self._spill()
+    def emit_keys(self, keys, counts):
+        """Batch fast path for vectorized producers: pre-packed pair keys
+        (``primary * vocab_size + secondary``) in one call, skipping per-row
+        splitting entirely. Semantically identical to the equivalent
+        ``emit_row`` calls (same buffer contents in the same order); the
+        counting hot loops use it when the sink offers it."""
+        n = len(keys)
+        if n == 0:
+            return
+        u = self._reserve(n)
+        if u < 0:
+            keys = np.asarray(keys, dtype=np.int64)
+            bkt = ((keys // self.vocab_size) >> self._pshift).astype(np.uint16)
+            self._oversize(keys, counts, bkt)
+            return
+        self._buf_keys[u:u + n] = keys
+        self._buf_cnts[u:u + n] = counts
+        np.right_shift(
+            self._buf_keys[u:u + n] // self.vocab_size, self._pshift,
+            out=self._buf_bkt[u:u + n], casting="unsafe",
+        )
+        self._commit(u, n)
+
+    def _note_keys(self, buf: np.ndarray) -> None:
+        """Track the ascending-emission streak: one O(1) range check plus an
+        O(n) diff — while it holds, the spill's radix argsort and
+        ``sum_by_key`` are skipped (the buffer is already sorted unique)."""
+        if self._buf_sorted:
+            if int(buf[0]) > self._last_key and (
+                len(buf) == 1 or bool((np.diff(buf) > 0).all())
+            ):
+                self._last_key = int(buf[-1])
+            else:
+                self._buf_sorted = False
 
     # ------------------------------------------------------ context manager
     def __enter__(self) -> "SpillSink":
@@ -149,17 +349,49 @@ class SpillSink:
         self.close()
 
     # ---------------------------------------------------------- spilling
-    def _drain_buffer(self) -> tuple[np.ndarray, np.ndarray]:
-        """Sort + aggregate the live buffer into unique (key, count) arrays."""
-        keys = np.concatenate(self._keys)
-        cnts = np.concatenate(self._cnts)
-        self._keys, self._cnts, self._buffered = [], [], 0
-        return sum_by_key(keys, cnts)
+    def _partition(self, keys, cnts, bkt, *, is_sorted: bool = False):
+        """Partition (keys, cnts) by primary-range bucket, yielding
+        (bucket, sorted unique keys, summed counts) per nonempty bucket.
 
-    def _spill(self) -> None:
-        if self._buffered == 0:
+        ``is_sorted`` (the ascending-emission streak held for this buffer):
+        bucket boundaries come from one ``searchsorted`` over the already
+        sorted unique keys — no argsort, no aggregation. Otherwise a radix
+        MSB pass (stable argsort of the 16-bit bucket tags into the reused
+        scratch arrays) groups the buckets and each small bucket is
+        aggregated independently — never a sort of the whole key space."""
+        n = len(keys)
+        if is_sorted:
+            edges = (
+                np.arange(1, self.num_buckets, dtype=np.int64) << self._pshift
+            ) * self.vocab_size
+            bounds = np.concatenate([[0], np.searchsorted(keys, edges), [n]])
+            cnts = np.asarray(cnts, dtype=np.int64)
+            for b in range(self.num_buckets):
+                s, e = bounds[b], bounds[b + 1]
+                if e > s:
+                    yield int(b), keys[s:e], cnts[s:e]
             return
-        keys, cnts = self._drain_buffer()
+        order = np.argsort(bkt, kind="stable")  # 16-bit tags: cheap MSB sort
+        if self._part_keys is None:
+            cap = len(self._buf_keys)
+            self._part_keys = np.empty(cap, dtype=np.int64)
+            self._part_cnts = np.empty(cap, dtype=np.int64)
+        pk = self._part_keys[:n] if n <= len(self._part_keys) else np.empty(
+            n, dtype=np.int64
+        )
+        pc = self._part_cnts[:n] if n <= len(self._part_cnts) else np.empty(
+            n, dtype=np.int64
+        )
+        np.take(keys, order, out=pk)
+        np.take(np.asarray(cnts, dtype=np.int64), order, out=pc)
+        sizes = np.bincount(bkt, minlength=self.num_buckets)
+        bounds = np.zeros(self.num_buckets + 1, dtype=np.int64)
+        np.cumsum(sizes, out=bounds[1:])
+        for b in np.nonzero(sizes)[0]:
+            s, e = bounds[b], bounds[b + 1]
+            yield int(b), *sum_by_key(pk[s:e], pc[s:e])
+
+    def _check_u32(self, cnts: np.ndarray) -> None:
         if len(cnts) and int(cnts.max()) >= 1 << 32:
             # the run format stores counts as u32 (paper format); a single
             # buffer can only exceed that when fed pre-aggregated counts
@@ -167,31 +399,75 @@ class SpillSink:
                 f"aggregated count {int(cnts.max())} exceeds the u32 run "
                 "format; lower memory_budget_pairs or pre-split the input"
             )
-        path = os.path.join(self.spill_dir, f"run_{len(self.runs):05d}.bin")
-        with FileSink(path) as run_sink:
-            for primary, secs, row_cnts in _rows_from_sorted_keys(
-                keys, cnts, self.vocab_size
-            ):
-                run_sink.emit_row(primary, secs, row_cnts)
-        self.runs.append(path)
+
+    def _partition_spill(self, keys, cnts, bkt, *, is_sorted=False) -> None:
+        """Partition one batch by bucket and write each nonempty bucket as
+        its own sorted run file."""
+        spill_id = self._spills
+        self._spills += 1
+        if is_sorted:
+            self.stats["sorted_spills"] += 1
+        for b, bkeys, bcnts in self._partition(keys, cnts, bkt,
+                                               is_sorted=is_sorted):
+            self._check_u32(bcnts)
+            path = os.path.join(
+                self.spill_dir, f"run_{spill_id:05d}_b{b:04d}.bin"
+            )
+            _write_run(path, bkeys, bcnts, self.vocab_size)
+            self.runs.append((b, path))
+            self.stats["spilled_bytes"] += os.path.getsize(path)
         self.stats["spills"] += 1
-        self.stats["spilled_bytes"] += os.path.getsize(path)
+        self.stats["bucket_runs"] = len(self.runs)
+
+    def _spill(self) -> None:
+        if self._buffered == 0:
+            return
+        n = self._buffered
+        was_sorted = self._buf_sorted
+        self._buffered = 0
+        # each run stands alone: the next buffer starts a fresh streak
+        self._buf_sorted = True
+        self._last_key = -1
+        self._partition_spill(
+            self._buf_keys[:n], self._buf_cnts[:n], self._buf_bkt[:n],
+            is_sorted=was_sorted,
+        )
 
     def flush(self) -> None:
-        """Force the live buffer to disk as a sorted run. After a flush the
-        run files alone carry the sink's full state — the PlanExecutor uses
-        this to make completed shards' spill directories restart-safe."""
+        """Force the live buffer to disk as sorted bucket runs. After a flush
+        the run files alone carry the sink's full state — the PlanExecutor
+        uses this to make completed shards' spill directories restart-safe."""
         self._spill()
 
     # --------------------------------------------------------- finalize
     def merged_rows(self):
         """Iterator of fully merged (primary, secondaries, counts) rows
-        across all spilled runs and the live buffer. May be consumed once."""
-        streams = [_iter_run(p) for p in self.runs]
+        across all spilled runs and the live buffer. May be consumed once.
+
+        Buckets partition the primary range in ascending order, so the merge
+        walks buckets one at a time — in memory when the bucket fits the
+        merge cap (4× the spill budget), via the streaming heap otherwise —
+        never holding more than one bucket's pairs at once
+        (see ``merge_bucket_runs``)."""
+        runs_by_bucket: dict[int, list[str]] = {}
+        for b, path in self.runs:
+            runs_by_bucket.setdefault(b, []).append(path)
+        live: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         if self._buffered:
-            keys, cnts = self._drain_buffer()
-            streams.append(_rows_from_sorted_keys(keys, cnts, self.vocab_size))
-        return merge_row_streams(streams)
+            n = self._buffered
+            was_sorted = self._buf_sorted
+            self._buffered = 0
+            live = {
+                b: (bkeys, bcnts)
+                for b, bkeys, bcnts in self._partition(
+                    self._buf_keys[:n], self._buf_cnts[:n], self._buf_bkt[:n],
+                    is_sorted=was_sorted,
+                )
+            }
+        yield from merge_bucket_runs(
+            runs_by_bucket, self.vocab_size,
+            cap_pairs=4 * self.memory_budget_pairs, live=live,
+        )
 
     def finalize_segment(
         self,
@@ -218,10 +494,10 @@ class SpillSink:
 
     def close(self) -> None:
         """Delete spill files (and the spill dir if we created it)."""
-        for p in self.runs:
+        for _, p in self.runs:
             if os.path.exists(p):
                 os.remove(p)
         self.runs = []
-        self._keys, self._cnts, self._buffered = [], [], 0
+        self._buffered = 0
         if self._own_dir and os.path.isdir(self.spill_dir):
             shutil.rmtree(self.spill_dir, ignore_errors=True)

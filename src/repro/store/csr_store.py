@@ -28,7 +28,7 @@ import os
 
 import numpy as np
 
-from repro.core.types import FileSink, PairSink, read_pair_file
+from repro.core.types import FileSink, PairSink, group_bounds, read_pair_file
 
 META_NAME = "meta.json"
 FORMAT_VERSION = 1
@@ -56,11 +56,16 @@ def write_segment(
     df: np.ndarray | None = None,
     num_docs: int = 0,
     source: str = "",
+    sym_chunk_pairs: int | None = None,
 ) -> str:
     """Materialize a segment from ``rows`` — an iterator of
     ``(primary, secondaries, counts)`` with strictly ascending primaries and,
     within each row, strictly ascending unique secondaries (the shape
     ``builder.merge_row_streams`` produces). Returns ``out_dir``.
+
+    ``sym_chunk_pairs`` bounds the symmetric-adjacency build's working set
+    (pairs streamed per chunk; default ``SYM_CHUNK_PAIRS``) — finalization
+    memory is O(V + chunk) regardless of nnz.
     """
     os.makedirs(out_dir, exist_ok=True)
     V = vocab_size
@@ -68,9 +73,23 @@ def write_segment(
     nnz = 0
     total = 0
     last_primary = -1
+    # batch row payloads into ~8 MB writes: thousands of small rows must not
+    # mean thousands of syscalls on the ingest hot path
+    pend_cols: list[np.ndarray] = []
+    pend_cnts: list[np.ndarray] = []
+    pending = 0
     with open(os.path.join(out_dir, "cols.bin"), "wb") as fc, open(
         os.path.join(out_dir, "counts.bin"), "wb"
     ) as fn:
+        def _flush_pending():
+            nonlocal pending
+            if pending:
+                fc.write(np.concatenate(pend_cols).tobytes())
+                fn.write(np.concatenate(pend_cnts).tobytes())
+                pend_cols.clear()
+                pend_cnts.clear()
+                pending = 0
+
         for primary, secs, cnts in rows:
             if primary <= last_primary:
                 raise ValueError(
@@ -83,9 +102,14 @@ def write_segment(
                 continue
             row_ptr[primary + 1] = n
             nnz += n
-            total += int(np.asarray(cnts, dtype=np.int64).sum())
-            fc.write(np.ascontiguousarray(secs, dtype=np.int32).tobytes())
-            fn.write(np.ascontiguousarray(cnts, dtype=np.int64).tobytes())
+            cnts64 = np.ascontiguousarray(cnts, dtype=np.int64)
+            total += int(cnts64.sum())
+            pend_cols.append(np.ascontiguousarray(secs, dtype=np.int32))
+            pend_cnts.append(cnts64)
+            pending += n
+            if pending >= (1 << 20):
+                _flush_pending()
+        _flush_pending()
     np.cumsum(row_ptr, out=row_ptr)
     _write_array(os.path.join(out_dir, "row_ptr.bin"), row_ptr, np.int64)
 
@@ -93,7 +117,10 @@ def write_segment(
         df = np.zeros(V, dtype=np.int64)
     _write_array(os.path.join(out_dir, "df.bin"), df, np.int64)
 
-    _write_symmetric(out_dir, row_ptr, V, nnz)
+    _write_symmetric(
+        out_dir, row_ptr, V, nnz,
+        chunk_pairs=sym_chunk_pairs or SYM_CHUNK_PAIRS,
+    )
 
     meta = {
         "format_version": FORMAT_VERSION,
@@ -108,32 +135,106 @@ def write_segment(
     return out_dir
 
 
-def _write_symmetric(out_dir: str, row_ptr: np.ndarray, V: int, nnz: int) -> None:
-    """Derive the symmetric adjacency from the on-disk upper CSR: every pair
-    (i, j, c) contributes j to row i and i to row j. One vectorized pass.
+# pairs streamed per chunk by the symmetric build (~20 MB of temporaries)
+SYM_CHUNK_PAIRS = 1 << 20
 
-    NOTE: this materializes O(nnz) working arrays (doubled COO + lexsort),
-    so segment *finalization* peaks at O(nnz) memory even though counting
-    and spilling stay within the SpillSink budget. An external-memory
-    adjacency build is a ROADMAP open item."""
-    cols = np.fromfile(os.path.join(out_dir, "cols.bin"), dtype=np.int32)
-    counts = np.fromfile(os.path.join(out_dir, "counts.bin"), dtype=np.int64)
-    rows = np.repeat(
-        np.arange(V, dtype=np.int32), np.diff(row_ptr).astype(np.int64)
+
+def _write_symmetric(
+    out_dir: str,
+    row_ptr: np.ndarray,
+    V: int,
+    nnz: int,
+    *,
+    chunk_pairs: int = SYM_CHUNK_PAIRS,
+) -> dict:
+    """Derive the symmetric adjacency from the on-disk upper CSR: every pair
+    (i, j, c) contributes j to row i and i to row j.
+
+    Two-pass external-memory build, O(V + chunk_pairs) working memory
+    regardless of nnz (the doubled-COO + lexsort build it replaces peaked at
+    O(nnz)):
+
+    * **Pass 1** streams ``cols.bin`` in chunks and bincounts incoming
+      degrees; symmetric degree = upper out-degree + in-degree gives
+      ``sym_row_ptr`` directly.
+    * **Pass 2** streams the upper CSR again and scatters each chunk into
+      preallocated mmapped ``sym_cols.bin``/``sym_counts.bin`` through
+      per-row write cursors. Within a chunk the reverse direction (j ← i)
+      is scattered before the forward direction (i → j): for any target row
+      t every reverse contribution (i, t) sits at a stream position before
+      row t's own forward entries, so cursor order writes each symmetric
+      row already ascending — no sort of the output ever happens.
+
+    Returns build stats: chunks processed and the peak per-chunk temporary
+    length (tests assert the bound; everything else is O(V))."""
+    sym_ptr_path = os.path.join(out_dir, "sym_row_ptr.bin")
+    sym_cols_path = os.path.join(out_dir, "sym_cols.bin")
+    sym_counts_path = os.path.join(out_dir, "sym_counts.bin")
+    stats = {"chunks": 0, "chunk_pairs": chunk_pairs, "peak_temp_elems": 0}
+    if nnz == 0:
+        _write_array(sym_ptr_path, np.zeros(V + 1, dtype=np.int64), np.int64)
+        open(sym_cols_path, "wb").close()
+        open(sym_counts_path, "wb").close()
+        return stats
+
+    cols = np.memmap(os.path.join(out_dir, "cols.bin"), dtype=np.int32, mode="r")
+    counts = np.memmap(
+        os.path.join(out_dir, "counts.bin"), dtype=np.int64, mode="r"
     )
-    # doubled COO (both directions), lexsorted to (row, col) order — neighbour
-    # IDs come out ascending per row, ready for binary search
-    r2 = np.concatenate([rows, cols])
-    c2 = np.concatenate([cols, rows])
-    v2 = np.concatenate([counts, counts])
-    order = np.lexsort((c2, r2))
-    sym_cols = c2[order].astype(np.int32)
-    sym_counts = v2[order]
+
+    # pass 1: symmetric degrees -> sym_row_ptr
+    indeg = np.zeros(V, dtype=np.int64)
+    for k0 in range(0, nnz, chunk_pairs):
+        indeg += np.bincount(cols[k0:min(k0 + chunk_pairs, nnz)], minlength=V)
     sym_ptr = np.zeros(V + 1, dtype=np.int64)
-    np.cumsum(np.bincount(r2, minlength=V), out=sym_ptr[1:])
-    _write_array(os.path.join(out_dir, "sym_row_ptr.bin"), sym_ptr, np.int64)
-    _write_array(os.path.join(out_dir, "sym_cols.bin"), sym_cols, np.int32)
-    _write_array(os.path.join(out_dir, "sym_counts.bin"), sym_counts, np.int64)
+    np.cumsum(np.diff(row_ptr) + indeg, out=sym_ptr[1:])
+    _write_array(sym_ptr_path, sym_ptr, np.int64)
+
+    # pass 2: cursor scatter into the preallocated mmapped outputs
+    sym_cols = np.memmap(sym_cols_path, dtype=np.int32, mode="w+", shape=2 * nnz)
+    sym_counts = np.memmap(
+        sym_counts_path, dtype=np.int64, mode="w+", shape=2 * nnz
+    )
+    cursor = sym_ptr[:-1].copy()
+    for k0 in range(0, nnz, chunk_pairs):
+        k1 = min(k0 + chunk_pairs, nnz)
+        j = np.asarray(cols[k0:k1])  # int32: halves the chunk sort traffic
+        cv = np.asarray(counts[k0:k1])
+        # row ids of entries [k0, k1): repeat each covered row by its overlap
+        # with the chunk (two scalar searchsorteds, not one per entry)
+        r0 = int(np.searchsorted(row_ptr, k0, side="right")) - 1
+        r1 = int(np.searchsorted(row_ptr, k1 - 1, side="right")) - 1
+        seg_lens = (
+            np.minimum(row_ptr[r0 + 1:r1 + 2], k1)
+            - np.maximum(row_ptr[r0:r1 + 1], k0)
+        )
+        rows = np.repeat(np.arange(r0, r1 + 1, dtype=np.int32), seg_lens)
+
+        # reverse direction first (see docstring): row j gets col i
+        order = np.argsort(j, kind="stable")  # i stays ascending per j
+        js = j[order]
+        gb = group_bounds(js)
+        gs, glen = gb[:-1], np.diff(gb)
+        pos = cursor[js] + (np.arange(len(js)) - np.repeat(gs, glen))
+        sym_cols[pos] = rows[order]
+        sym_counts[pos] = cv[order]
+        cursor[js[gs]] += glen
+
+        # forward direction: row i gets col j (rows nondecreasing in-chunk)
+        fb = group_bounds(rows)
+        fs, flen = fb[:-1], np.diff(fb)
+        pos = cursor[rows] + (np.arange(len(rows)) - np.repeat(fs, flen))
+        sym_cols[pos] = j
+        sym_counts[pos] = cv
+        cursor[rows[fs]] += flen
+
+        stats["chunks"] += 1
+        stats["peak_temp_elems"] = max(stats["peak_temp_elems"], k1 - k0)
+    # no explicit msync: readers see the pages through the unified page
+    # cache immediately (exactly like the tofile() build this replaced);
+    # the OS writes dirty pages back asynchronously
+    del sym_cols, sym_counts
+    return stats
 
 
 class CSRSegment:

@@ -307,3 +307,165 @@ def test_cooc_serve_driver_smoke():
     stats = serve(docs=200, vocab=256, queries=64, batch=16, topk=5)
     assert stats["topk_qps"] > 0 and stats["pair_qps"] > 0
     assert stats["num_docs"] == 200
+
+
+# ------------------------------------------------- radix-partitioned spills
+def test_spill_runs_are_bucketed(coll, tmp_path):
+    """A spill writes one sorted run per nonempty primary-range bucket;
+    finalization merges per bucket, and the result still equals the dense
+    oracle (covered above) while run files carry bucket ids."""
+    sink = SpillSink(coll.vocab_size, memory_budget_pairs=64,
+                     spill_dir=str(tmp_path / "spill"))
+    count("list-scan", coll, sink)
+    sink.flush()
+    assert sink.stats["spills"] > 1
+    assert sink.stats["bucket_runs"] == len(sink.runs) > 0
+    for bucket, path in sink.runs:
+        name = os.path.basename(path)
+        assert name.endswith(f"_b{bucket:04d}.bin"), name
+        # every run's primaries stay inside its bucket's primary range
+        lo = bucket << sink._pshift
+        hi = (bucket + 1) << sink._pshift
+        for primary, _, _ in read_pair_file(path):
+            assert lo <= primary < hi, (primary, bucket)
+    sink.close()
+
+
+def test_sum_by_key_byte_identical_to_two_sort_reference():
+    """Single-sort + diff-boundary aggregation is byte-identical (values
+    AND dtypes) to the old argsort + np.unique double-sort on random input."""
+    from repro.store.builder import sum_by_key
+
+    def two_sort_reference(keys, cnts):
+        order = np.argsort(keys, kind="stable")
+        keys, cnts = keys[order], np.asarray(cnts, dtype=np.int64)[order]
+        uniq, start = np.unique(keys, return_index=True)
+        return uniq, np.add.reduceat(cnts, start)
+
+    rng = np.random.default_rng(3)
+    for n in [1, 2, 17, 1000, 20000]:
+        keys = rng.integers(0, max(1, n // 2), size=n).astype(np.int64)
+        cnts = rng.integers(1, 1000, size=n).astype(np.uint32)  # narrow in
+        got_k, got_c = sum_by_key(keys, cnts)
+        want_k, want_c = two_sort_reference(keys, cnts)
+        assert got_k.dtype == want_k.dtype and got_c.dtype == want_c.dtype
+        assert np.array_equal(got_k, want_k)
+        assert np.array_equal(got_c, want_c)
+    # empty input stays typed and empty
+    got_k, got_c = sum_by_key(np.array([], dtype=np.int64), np.array([]))
+    assert got_k.dtype == np.int64 and got_c.dtype == np.int64
+    assert len(got_k) == 0 and len(got_c) == 0
+
+
+def test_spill_overflow_u32_survives_radix_rewrite(tmp_path):
+    """Regression: pre-aggregated counts >= 2^32 must still raise
+    OverflowError (the run format stores u32 counts) through the
+    radix-partitioned spill path — including the oversize-emission path."""
+    sink = SpillSink(100, memory_budget_pairs=8)
+    sink.emit_row(1, np.array([2, 3]), np.array([1 << 32, 5], dtype=np.int64))
+    with pytest.raises(OverflowError, match="u32"):
+        sink.flush()
+    sink.close()
+    # oversize emission (bigger than the whole buffer) goes straight to disk
+    sink = SpillSink(1000, memory_budget_pairs=4)
+    big = np.arange(1, 41, dtype=np.int64)
+    with pytest.raises(OverflowError, match="u32"):
+        sink.emit_row(0, big, np.full(40, 1 << 33, dtype=np.int64))
+    sink.close()
+
+
+def test_emit_does_not_mutate_caller_arrays(coll, tmp_path):
+    """The copy-free emit path packs keys into the sink's own buffers —
+    the caller's secondaries/counts must come back untouched."""
+    sink = SpillSink(64, memory_budget_pairs=128)
+    secs = np.array([3, 9, 11], dtype=np.int64)
+    cnts = np.array([1, 2, 3], dtype=np.int64)
+    sink.emit_row(1, secs, cnts)
+    prims = np.array([2, 5], dtype=np.int32)
+    ccnts = np.array([7, 8], dtype=np.uint32)
+    sink.emit_col(60, prims, ccnts)
+    assert np.array_equal(secs, [3, 9, 11]) and np.array_equal(cnts, [1, 2, 3])
+    assert np.array_equal(prims, [2, 5]) and np.array_equal(ccnts, [7, 8])
+    seg = sink.finalize_segment(str(tmp_path / "seg"))
+    assert seg.pair_count(1, 9) == 2 and seg.pair_count(5, 60) == 8
+
+
+# --------------------------------------- external-memory symmetric build
+def _read_sym(seg_dir):
+    return (
+        np.fromfile(os.path.join(seg_dir, "sym_row_ptr.bin"), dtype=np.int64),
+        np.fromfile(os.path.join(seg_dir, "sym_cols.bin"), dtype=np.int32),
+        np.fromfile(os.path.join(seg_dir, "sym_counts.bin"), dtype=np.int64),
+    )
+
+
+def _read_upper(seg_dir):
+    return (
+        np.fromfile(os.path.join(seg_dir, "row_ptr.bin"), dtype=np.int64),
+        np.fromfile(os.path.join(seg_dir, "cols.bin"), dtype=np.int32),
+        np.fromfile(os.path.join(seg_dir, "counts.bin"), dtype=np.int64),
+    )
+
+
+def test_symmetric_build_is_external_memory(tmp_path):
+    """Acceptance: a segment whose nnz exceeds the configured chunk by >=10x
+    builds its symmetric adjacency without materializing O(nnz) arrays —
+    the build reports per-chunk temporaries bounded by the chunk size — and
+    the result is byte-identical to the in-memory lexsort reference."""
+    from conftest import lexsort_sym_reference
+    from repro.store.csr_store import _write_symmetric, write_segment
+
+    V = 120
+    rows = [
+        (i, np.arange(i + 1, V, dtype=np.int64),
+         np.full(V - i - 1, i + 1, dtype=np.int64))
+        for i in range(V - 1)
+    ]
+    seg_dir = str(tmp_path / "seg")
+    write_segment(seg_dir, iter(rows), V)
+    row_ptr, cols, counts = _read_upper(seg_dir)
+    nnz = int(row_ptr[-1])
+    chunk = nnz // 16
+    assert nnz >= 10 * chunk
+    stats = _write_symmetric(seg_dir, row_ptr, V, nnz, chunk_pairs=chunk)
+    assert stats["chunks"] >= 10
+    assert stats["peak_temp_elems"] <= chunk  # O(V + chunk), never O(nnz)
+    want = lexsort_sym_reference(row_ptr, cols, counts, V)
+    got = _read_sym(seg_dir)
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype and np.array_equal(g, w)
+
+
+def test_symmetric_build_identical_on_random_segments(tmp_path):
+    """Streamed two-pass build == in-memory lexsort build on random upper
+    CSR segments, including empty rows, empty segments, and single-row
+    segments, at adversarial chunk sizes."""
+    from conftest import lexsort_sym_reference
+    from repro.store.csr_store import write_segment
+
+    rng = np.random.default_rng(7)
+    cases = []
+    for trial in range(25):
+        V = int(rng.integers(1, 50))
+        density = float(rng.random()) * 0.5
+        dense = np.triu(
+            (rng.random((V, V)) < density) * rng.integers(1, 90, (V, V)), 1
+        )
+        cases.append((V, dense, int(rng.integers(1, 60))))
+    cases.append((1, np.zeros((1, 1), dtype=np.int64), 1))      # empty segment
+    one = np.zeros((4, 4), dtype=np.int64)
+    one[1, 3] = 5
+    cases.append((4, one, 1))                                   # single row
+    for idx, (V, dense, chunk) in enumerate(cases):
+        rows = [
+            (i, np.nonzero(dense[i])[0], dense[i][np.nonzero(dense[i])[0]])
+            for i in range(V)
+            if dense[i].any()
+        ]
+        seg_dir = str(tmp_path / f"seg{idx}")
+        write_segment(seg_dir, iter(rows), V, sym_chunk_pairs=chunk)
+        row_ptr, cols, counts = _read_upper(seg_dir)
+        want = lexsort_sym_reference(row_ptr, cols, counts, V)
+        got = _read_sym(seg_dir)
+        for g, w in zip(got, want):
+            assert np.array_equal(g, w), idx
