@@ -24,6 +24,12 @@ Two gates ride along (CI fails if either regresses):
   loop baseline's (cols/counts/row_ptr and the symmetric arrays) — the
   throughput numbers are exactness-gated, not just fast.
 
+The timed/gated builds run with telemetry **disabled** (the committed
+docs/hour numbers double as the telemetry-off overhead regression artifact);
+one extra instrumented build under ``obs.scoped()`` contributes the
+``"stages"`` per-stage span breakdown (spill / bucket_merge / segment_write /
+refresh seconds plus the ingest counters) to the JSON.
+
     PYTHONPATH=src:. python benchmarks/ingest_bench.py --json BENCH_ingest.json
     PYTHONPATH=src:. python benchmarks/ingest_bench.py --smoke --json BENCH_ingest.json
 """
@@ -44,6 +50,7 @@ from benchmarks.common import (
     ingest_scales,
     needs_df_descending,
 )
+from repro import obs
 from repro.core.cooc import count
 from repro.core.list_scan import count_list_scan_loop
 from repro.data.corpus import synthetic_zipf_collection
@@ -194,6 +201,32 @@ def _run_ingest_in(
                 )
             entries.append(e)
 
+    # One extra *instrumented* build (obs spans on) at the top list-scan
+    # scale, for the per-stage breakdown. Separate from the gated runs above,
+    # which stay telemetry-disabled — their docs/hour doubles as the
+    # telemetry-off overhead regression artifact.
+    probe_scale = max(ingest_scales("list-scan", smoke=smoke))
+    with obs.scoped() as reg:
+        probe = _build_once(
+            lambda cc, sink, **kw: count("list-scan", cc, sink, **kw)[1],
+            collections[probe_scale], workdir, budget,
+            f"stages-probe_{probe_scale}", **bench_kwargs("list-scan"),
+        )
+    snap = reg.snapshot()
+    stages = {
+        "docs": probe_scale,
+        "build_s": probe["build_s"],
+        "stage_seconds": {
+            name.split("/", 1)[1]: round(secs, 4)
+            for name, secs in sorted(reg.stage_totals("ingest/").items())
+        },
+        "counters": {
+            name.split(".", 1)[1]: v
+            for name, v in sorted(snap["counters"].items())
+            if name.startswith("ingest.")
+        },
+    }
+
     top_scale = str(max(int(k) for k in speedups))
     out = {
         "suite": "ingest",
@@ -202,6 +235,7 @@ def _run_ingest_in(
             "seed": seed, "smoke": smoke, "scales": scales,
         },
         "entries": entries,
+        "stages": stages,
         "list_scan_speedup_vs_loop": speedups,
         "gate": {
             "min_speedup": min_speedup,

@@ -185,6 +185,11 @@ def run_serving(
                 "pair_qps", "pair_p50_ms", "pair_p99_ms",
             )
         },
+        # server-side decomposition of the client-wall percentiles above:
+        # queue-wait vs execute vs total request latency, from worker
+        # histograms merged across processes (docs/observability.md)
+        "server_timing": served.get("server_timing", {}),
+        "workers_lost": served.get("workers_lost", 0),
         "serving_stats": served["serving"],
     }
     if json_path:

@@ -112,7 +112,8 @@ with CoocServer(store_path, workers=2, batch_window_ms=2.0,
     schunks = list(client.topk_stream(terms, k=50, chunk=16))
     assert np.array_equal(
         np.concatenate([c[0] for c in schunks], axis=1), full_ids)
-print("served identically by", server.stats["workers"],
-      "routed shared-mmap workers;", server.stats["requests"],
-      "request(s) in", server.stats["batches"], "micro-batch(es);",
-      "cache hit rate", server.stats["cache_hit_rate"])
+stats = server.stats()
+print("served identically by", stats["workers"],
+      "routed shared-mmap workers;", stats["requests"],
+      "request(s) in", stats["batches"], "micro-batch(es);",
+      "cache hit rate", stats["cache_hit_rate"])

@@ -41,6 +41,7 @@ from typing import Mapping
 
 import numpy as np
 
+from repro import obs
 from repro.core.specs import REGISTRY, MethodSpec, get_spec
 from repro.core.types import DenseSink, FileSink, StatsSink
 from repro.data.corpus import Collection, CollectionStats
@@ -332,6 +333,39 @@ class PlanExecutor:
         ckpt_every: int = 0,
         resume: bool = False,
     ) -> ExecutionResult:
+        # warm the lazy imports before the root span opens: first-use import
+        # cost (checkpoint machinery, sharding, sinks) is process setup, not
+        # ingest stage time — with it inside the span, a fresh process's
+        # stage spans could not tile the root span's wall time
+        from repro import checkpoint  # noqa: F401
+        from repro.data import preprocess  # noqa: F401
+        from repro.runtime import fault  # noqa: F401
+        from repro.store import builder  # noqa: F401
+
+        # the root ingest span: every stage span (count/spill/bucket_merge/
+        # segment_write/refresh — see docs/observability.md) nests under it,
+        # so a trace shows where one run's wall time went
+        with obs.get_registry().span(
+            "ingest/execute",
+            method=plan.method,
+            sink=plan.sink_policy,
+            output=plan.job.output,
+            shards=plan.job.num_shards,
+            docs=plan.job.collection.num_docs,
+            resume=resume,
+        ):
+            return self._execute(
+                plan, out_dir=out_dir, ckpt_every=ckpt_every, resume=resume
+            )
+
+    def _execute(
+        self,
+        plan: Plan,
+        *,
+        out_dir: str | None,
+        ckpt_every: int,
+        resume: bool,
+    ) -> ExecutionResult:
         from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
         from repro.data.preprocess import shard_documents
         from repro.runtime.fault import WorkTracker
@@ -377,6 +411,7 @@ class PlanExecutor:
                     if idx not in done_ids or idx >= job.num_shards:
                         shutil.rmtree(d, ignore_errors=True)
 
+        reg = obs.get_registry()
         done_since_ckpt = 0
         while not tracker.finished:
             unit = tracker.claim(self.worker, time.monotonic())
@@ -384,30 +419,40 @@ class PlanExecutor:
                 tracker.expire(time.monotonic())
                 continue
             (s,) = unit
-            if dense:
-                sink = DenseSink(V)
-            elif spill:
-                shard_dir = os.path.join(spill_root, f"shard_{s:05d}")
-                if os.path.isdir(shard_dir):
-                    shutil.rmtree(shard_dir)  # partial runs from a dead lease
-                sink = SpillSink(
-                    V,
-                    memory_budget_pairs=job.memory_budget_pairs,
-                    spill_dir=shard_dir,
-                )
-            else:
-                sink = StatsSink()
-            plan.spec.fn(shards[s], sink, **plan.method_kwargs)
-            if tracker.complete(unit, self.worker):
+            # per-shard count span: covers sink setup (the spill buffers are
+            # a real allocation), produce, AND the completion flush, with
+            # nested ingest/spill spans (mid-count and flush-time) — its
+            # inclusive time is the shard's whole cost before merging
+            with reg.span(
+                "ingest/count", shard=s, method=plan.method,
+                docs=shards[s].num_docs,
+            ):
                 if dense:
-                    acc += sink.mat
+                    sink = DenseSink(V)
                 elif spill:
-                    sink.flush()  # run files persist: they are the checkpoint
+                    shard_dir = os.path.join(spill_root, f"shard_{s:05d}")
+                    if os.path.isdir(shard_dir):
+                        shutil.rmtree(shard_dir)  # partials from a dead lease
+                    sink = SpillSink(
+                        V,
+                        memory_budget_pairs=job.memory_budget_pairs,
+                        spill_dir=shard_dir,
+                    )
                 else:
-                    agg["distinct_pairs"] += sink.distinct_pairs  # upper bound
-                    agg["total_count"] += sink.total_count
-                    agg["output_bytes"] += sink.output_bytes
-                done_since_ckpt += 1
+                    sink = StatsSink()
+                plan.spec.fn(shards[s], sink, **plan.method_kwargs)
+                if tracker.complete(unit, self.worker):
+                    if dense:
+                        acc += sink.mat
+                    elif spill:
+                        sink.flush()  # run files persist: the checkpoint
+                    else:
+                        agg["distinct_pairs"] += sink.distinct_pairs  # upper
+                        agg["total_count"] += sink.total_count
+                        agg["output_bytes"] += sink.output_bytes
+                    done_since_ckpt += 1
+            reg.counter("ingest.docs_counted").inc(shards[s].num_docs)
+            reg.counter("ingest.shards_done").inc()
             if ckpt_every and done_since_ckpt >= ckpt_every:
                 save_checkpoint(
                     ckpt_dir,
@@ -459,7 +504,9 @@ class PlanExecutor:
         if job.output == "dense" or job.output == "stats":
             result.counts = upper
         if job.output == "pairs-file":
-            with FileSink(job.out_path) as sink:
+            with obs.get_registry().span("ingest/pairs_write"), FileSink(
+                job.out_path
+            ) as sink:
                 for primary, secs, cnts in _dense_rows(upper):
                     sink.emit_row(primary, secs, cnts)
             result.pairs_path = job.out_path
@@ -507,7 +554,9 @@ class PlanExecutor:
                 yield primary, secs, cnts
 
         if job.output == "pairs-file":
-            with FileSink(job.out_path) as sink:
+            with obs.get_registry().span("ingest/pairs_write"), FileSink(
+                job.out_path
+            ) as sink:
                 for primary, secs, cnts in tallied(merged):
                     sink.emit_row(primary, secs, cnts)
             result.pairs_path = job.out_path
@@ -537,10 +586,16 @@ class PlanExecutor:
                 )
         else:
             store = Store.create(job.out_path, c.vocab_size)
+        # a second handle opened before the commit: the refresh span below
+        # measures visibility — the time until an independent (serving-side)
+        # reader observes the new segment, exactly what ingest_bench gates
+        reader = Store.open(job.out_path)
         df = np.bincount(c.terms, minlength=c.vocab_size).astype(np.int64)
         seg = store.add_segment_from_rows(
             rows, df=df, num_docs=c.num_docs, source=f"plan:{plan.method}"
         )
+        with obs.get_registry().span("ingest/refresh") as sp:
+            sp.set(visible=reader.refresh())
         result.store = store
         result.segment = seg
         result.summary.setdefault("distinct_pairs", int(seg.nnz))

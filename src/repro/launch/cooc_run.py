@@ -19,6 +19,14 @@ and k-way-merge them within the memory budget (the old approximate
 Checkpoint/restart: tracker + accumulator state are checkpointed every
 --ckpt-every completed shards (spill runs persist on disk per shard);
 `--resume` continues a killed run without recounting finished shards.
+
+Telemetry (off by default; see docs/observability.md): ``--trace-out FILE``
+enables the obs registry and writes the run's span tree as a Chrome
+``trace_event`` JSON (chrome://tracing / Perfetto) — with ``--output store``
+the trace holds all five ingest stages (count, spill, bucket_merge,
+segment_write, refresh). ``--metrics-interval S`` dumps a Prometheus-text
+metrics snapshot to stderr every S seconds while the run executes. Either
+flag also adds a per-stage ``stage_seconds`` breakdown to result.json.
 """
 
 from __future__ import annotations
@@ -26,7 +34,10 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
+import threading
 
+from repro import obs
 from repro.core.plan import CountJob, Planner
 from repro.data.corpus import collection_stats, synthetic_zipf_collection
 from repro.data.preprocess import remap_df_descending
@@ -42,17 +53,25 @@ def run(
     resume: bool = False,
     dense_vocab_cap: int = 4096,
     memory_budget_pairs: int = 4 << 20,
+    output: str = "pairs-file",
+    trace_out: str | None = None,
+    metrics_interval: float = 0.0,
 ) -> dict:
     os.makedirs(out_dir, exist_ok=True)
+    telemetry = bool(trace_out) or metrics_interval > 0
+    reg = obs.configure(enabled=True) if telemetry else obs.get_registry()
     c = synthetic_zipf_collection(num_docs, vocab=vocab, mean_len=60, seed=0)
     cd, _ = remap_df_descending(c)
     print(f"[corpus] {collection_stats(cd)}")
 
+    out_path = os.path.join(
+        out_dir, "store" if output == "store" else "pairs.bin"
+    )
     job = CountJob(
         collection=cd,
-        output="pairs-file",
+        output=output,
         method=method,
-        out_path=os.path.join(out_dir, "pairs.bin"),
+        out_path=out_path,
         num_shards=num_shards,
         dense_vocab_cap=dense_vocab_cap,
         memory_budget_pairs=memory_budget_pairs,
@@ -64,9 +83,33 @@ def run(
         f"[plan] method={plan.method} sink={plan.sink_policy} "
         f"exact={plan.exact} ranking={plan.describe()['ranking']}"
     )
-    res = plan.execute(out_dir=out_dir, ckpt_every=ckpt_every, resume=resume)
+
+    stop_metrics = threading.Event()
+
+    def _dump_metrics():
+        while not stop_metrics.wait(metrics_interval):
+            print(reg.prometheus_text(), file=sys.stderr, flush=True)
+
+    dumper = None
+    if metrics_interval > 0:
+        dumper = threading.Thread(target=_dump_metrics, daemon=True)
+        dumper.start()
+    try:
+        res = plan.execute(out_dir=out_dir, ckpt_every=ckpt_every, resume=resume)
+    finally:
+        stop_metrics.set()
+        if dumper is not None:
+            dumper.join(timeout=5)
 
     result = res.summary
+    if telemetry:
+        result["stage_seconds"] = {
+            name.split("/", 1)[1]: round(secs, 4)
+            for name, secs in sorted(reg.stage_totals("ingest/").items())
+        }
+        if trace_out:
+            reg.write_trace(trace_out)
+            print(f"[trace] {len(reg.span_events())} spans -> {trace_out}")
     with open(os.path.join(out_dir, "result.json"), "w") as f:
         json.dump(result, f, indent=2)
     print(f"[done] {result}")
@@ -82,6 +125,21 @@ def main():
     ap.add_argument("--out", default="/tmp/cooc_out")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--budget-pairs", type=int, default=4 << 20)
+    ap.add_argument(
+        "--output", default="pairs-file", choices=["pairs-file", "store"],
+        help="paper-format pairs file, or a queryable CSR store "
+             "(store runs exercise all five ingest stages)",
+    )
+    ap.add_argument(
+        "--trace-out", default=None,
+        help="write a Chrome trace_event JSON of the run's spans here "
+             "(enables telemetry)",
+    )
+    ap.add_argument(
+        "--metrics-interval", type=float, default=0.0,
+        help="dump Prometheus-text metrics to stderr every S seconds "
+             "(enables telemetry)",
+    )
     args = ap.parse_args()
     run(
         args.docs,
@@ -91,6 +149,9 @@ def main():
         args.out,
         resume=args.resume,
         memory_budget_pairs=args.budget_pairs,
+        output=args.output,
+        trace_out=args.trace_out,
+        metrics_interval=args.metrics_interval,
     )
 
 

@@ -27,6 +27,16 @@ JSON reports the aggregate and per-worker ``cache_hit_rate``).
 ``--kernel`` picks the score-and-select backend for either topology:
 ``numpy`` (jitted reference) or ``pallas`` (fused top-k gather kernel;
 interpreter mode off-TPU). Results are bit-identical between the two.
+
+Latency is reported from **both sides of the queue**: the ``topk_p*_ms`` /
+``pair_p*_ms`` keys are client-side wall percentiles (submit → response,
+including queue transport), while ``server_timing`` (multi-process runs)
+breaks the same traffic down server-side — queue-wait vs execute vs total
+request latency, from worker histograms merged across processes (see
+docs/observability.md). ``--trace-out`` writes the driver-side span trace
+(the store build's ingest stages and in-process query spans);
+``--metrics-interval S`` dumps Prometheus-text metrics to stderr every S
+seconds and sets the workers' snapshot cadence.
 """
 
 from __future__ import annotations
@@ -34,18 +44,22 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import tempfile
 import threading
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.core.cooc import count_to_store
 from repro.data.corpus import _zipf_probs, synthetic_zipf_collection
 from repro.store import CoocServer, QueryEngine, Store
 
 
 def _percentiles(lat_s: list[float]) -> dict:
+    """Client-side wall percentiles (queue transport included) — compare
+    with the server-side ``server_timing`` histograms."""
     a = np.asarray(lat_s) * 1e3
     return {
         "p50_ms": round(float(np.percentile(a, 50)), 3),
@@ -127,7 +141,8 @@ def _serve_inprocess(
 def _serve_multiprocess(
     store_path, draw, queries, batch, topk, score,
     workers, clients, batch_window_ms, kernel, seed,
-    routing=False, cache_rows=4096,
+    routing=False, cache_rows=4096, metrics_interval=0.0,
+    keep_metrics=False,
 ) -> dict:
     """Two phases (all-clients top-k, then all-clients pair lookups),
     barrier-aligned so each workload's QPS is measured against its own
@@ -143,7 +158,21 @@ def _serve_multiprocess(
     server = CoocServer(
         store_path, workers=workers, batch_window_ms=batch_window_ms,
         kernel=kernel, routing=routing, cache_rows=cache_rows,
+        stats_interval_s=metrics_interval,
     ).start()
+
+    stop_dump = threading.Event()
+    dumper = None
+    if metrics_interval > 0:
+        def _dump():
+            # Live fleet view: workers publish registry snapshots every
+            # stats_interval_s; stats() merges the freshest per worker.
+            while not stop_dump.wait(metrics_interval):
+                snap = server.stats().get("metrics")
+                if snap:
+                    print(obs.prometheus_text(snap), file=sys.stderr, flush=True)
+        dumper = threading.Thread(target=_dump, daemon=True)
+        dumper.start()
 
     def client_loop(idx: int):
         try:
@@ -191,6 +220,9 @@ def _serve_multiprocess(
         t.start()
     for t in threads:
         t.join()
+    stop_dump.set()
+    if dumper is not None:
+        dumper.join(timeout=5)
     sstats = server.stop()
     if errors:
         raise errors[0]
@@ -199,6 +231,12 @@ def _serve_multiprocess(
         starts, ends = zip(*spans[name])
         return max(ends) - min(starts)
 
+    # ``server_timing`` is hoisted to the top of the result; the raw merged
+    # metrics snapshot is bulky, so it only stays when telemetry was asked for.
+    serving = {
+        k: v for k, v in sstats.items()
+        if k != "server_timing" and (keep_metrics or k != "metrics")
+    }
     total_topk = len(lat_topk) * batch
     total_pair = len(lat_pair) * batch
     return {
@@ -207,7 +245,9 @@ def _serve_multiprocess(
         **{f"topk_{k}": v for k, v in _percentiles(lat_topk).items()},
         "pair_qps": round(total_pair / phase_wall("pair")),
         **{f"pair_{k}": v for k, v in _percentiles(lat_pair).items()},
-        "serving": sstats,
+        "server_timing": sstats.get("server_timing", {}),
+        "workers_lost": sstats.get("workers_lost", 0),
+        "serving": serving,
     }
 
 
@@ -229,24 +269,42 @@ def serve(
     routing: bool = False,
     cache_rows: int = 4096,
     json_out: str | None = None,
+    trace_out: str | None = None,
+    metrics_interval: float = 0.0,
 ) -> dict:
     """Build/open a store and replay a Zipf workload; returns the stats dict
     (and writes it as JSON to ``json_out`` if given)."""
+    telemetry = bool(trace_out) or metrics_interval > 0
+    reg = obs.configure(enabled=True) if telemetry else obs.get_registry()
     store, store_path, build_s = _build_or_open(
         docs, vocab, method, store_path, budget_pairs, seed
     )
     draw = _zipf_sampler(store, seed)
 
     if workers <= 0:
-        served = _serve_inprocess(
-            store, draw, queries, batch, topk, score, kernel, seed,
-            cache_rows=cache_rows,
-        )
+        stop_dump = threading.Event()
+        dumper = None
+        if metrics_interval > 0:
+            def _dump():
+                while not stop_dump.wait(metrics_interval):
+                    print(reg.prometheus_text(), file=sys.stderr, flush=True)
+            dumper = threading.Thread(target=_dump, daemon=True)
+            dumper.start()
+        try:
+            served = _serve_inprocess(
+                store, draw, queries, batch, topk, score, kernel, seed,
+                cache_rows=cache_rows,
+            )
+        finally:
+            stop_dump.set()
+            if dumper is not None:
+                dumper.join(timeout=5)
     else:
         served = _serve_multiprocess(
             store_path, draw, queries, batch, topk, score,
             workers, clients, batch_window_ms, kernel, seed,
             routing=routing, cache_rows=cache_rows,
+            metrics_interval=metrics_interval, keep_metrics=telemetry,
         )
 
     stats = {
@@ -261,6 +319,16 @@ def serve(
         "routing": bool(routing and workers > 1),
         **served,
     }
+    if telemetry:
+        build_stages = reg.stage_totals("ingest/")
+        if build_stages:
+            stats["build_stage_seconds"] = {
+                name.split("/", 1)[1]: round(secs, 4)
+                for name, secs in sorted(build_stages.items())
+            }
+        if trace_out:
+            reg.write_trace(trace_out)
+            print(f"[trace] {len(reg.span_events())} spans -> {trace_out}")
     print(json.dumps(stats))
     if json_out:
         with open(json_out, "w") as f:
@@ -308,6 +376,16 @@ def main():
         help="per-engine/per-worker LRU row-cache capacity",
     )
     ap.add_argument("--json", default=None, help="also write stats JSON here")
+    ap.add_argument(
+        "--trace-out", default=None,
+        help="write a Chrome trace_event JSON of driver-side spans here "
+             "(enables telemetry)",
+    )
+    ap.add_argument(
+        "--metrics-interval", type=float, default=0.0,
+        help="dump Prometheus-text metrics to stderr every S seconds; also "
+             "the workers' stats-snapshot cadence (enables telemetry)",
+    )
     args = ap.parse_args()
     serve(
         args.docs,
@@ -326,6 +404,8 @@ def main():
         routing=args.routing,
         cache_rows=args.cache_rows,
         json_out=args.json,
+        trace_out=args.trace_out,
+        metrics_interval=args.metrics_interval,
     )
 
 

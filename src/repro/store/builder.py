@@ -28,6 +28,7 @@ import tempfile
 
 import numpy as np
 
+from repro import obs
 from repro.core.types import group_bounds, iter_pair_file
 
 # radix partition width: at most 2^BUCKET_BITS primary-range buckets
@@ -120,26 +121,33 @@ def merge_bucket_runs(by_bucket, V: int, *, cap_pairs: int, live=None):
     bucket -> (sorted unique keys, counts) for a sink's unspilled buffer.
     """
     live = dict(live or {})
+    reg = obs.get_registry()
     for b in sorted(set(by_bucket) | set(live)):
         paths = by_bucket.get(b, [])
         lk = live.pop(b, None)
         # run bytes = 8·pairs + 8·rows, so size//8 never underestimates
         est = sum(os.path.getsize(p) // 8 for p in paths)
         est += len(lk[0]) if lk else 0
+        reg.counter("ingest.runs_merged").inc(len(paths))
         if est <= cap_pairs:
-            parts = [_load_run(p, V) for p in paths]
-            if lk is not None:
-                parts.append(lk)
-            if len(parts) == 1:
-                keys, cnts = parts[0]  # a lone run is already aggregated
-            else:
-                keys = np.concatenate([p[0] for p in parts])
-                cnts = np.concatenate([p[1] for p in parts])
-                # a term-order producer (LIST-SCAN) emits globally ascending
-                # keys, so consecutive spills cover disjoint ascending
-                # ranges: one diff check replaces the whole merge sort
-                if not bool((np.diff(keys) > 0).all()):
-                    keys, cnts = sum_by_key(keys, cnts)
+            # the merge work is the eager part (load + aggregate); the span
+            # closes before the rows are yielded so a slow consumer does not
+            # inflate the merge timing
+            with reg.span("ingest/bucket_merge", bucket=b, runs=len(paths)):
+                parts = [_load_run(p, V) for p in paths]
+                if lk is not None:
+                    parts.append(lk)
+                if len(parts) == 1:
+                    keys, cnts = parts[0]  # a lone run is already aggregated
+                else:
+                    keys = np.concatenate([p[0] for p in parts])
+                    cnts = np.concatenate([p[1] for p in parts])
+                    # a term-order producer (LIST-SCAN) emits globally
+                    # ascending keys, so consecutive spills cover disjoint
+                    # ascending ranges: one diff check replaces the whole
+                    # merge sort
+                    if not bool((np.diff(keys) > 0).all()):
+                        keys, cnts = sum_by_key(keys, cnts)
             yield from _rows_from_sorted_keys(keys, cnts, V)
         else:
             streams = [_iter_run(p) for p in paths]
@@ -407,17 +415,29 @@ class SpillSink:
         self._spills += 1
         if is_sorted:
             self.stats["sorted_spills"] += 1
-        for b, bkeys, bcnts in self._partition(keys, cnts, bkt,
-                                               is_sorted=is_sorted):
-            self._check_u32(bcnts)
-            path = os.path.join(
-                self.spill_dir, f"run_{spill_id:05d}_b{b:04d}.bin"
-            )
-            _write_run(path, bkeys, bcnts, self.vocab_size)
-            self.runs.append((b, path))
-            self.stats["spilled_bytes"] += os.path.getsize(path)
+        nruns0 = len(self.runs)
+        bytes0 = self.stats["spilled_bytes"]
+        with obs.get_registry().span(
+            "ingest/spill", pairs=len(keys), sorted=is_sorted
+        ) as sp:
+            for b, bkeys, bcnts in self._partition(keys, cnts, bkt,
+                                                   is_sorted=is_sorted):
+                self._check_u32(bcnts)
+                path = os.path.join(
+                    self.spill_dir, f"run_{spill_id:05d}_b{b:04d}.bin"
+                )
+                _write_run(path, bkeys, bcnts, self.vocab_size)
+                self.runs.append((b, path))
+                self.stats["spilled_bytes"] += os.path.getsize(path)
+            sp.set(runs=len(self.runs) - nruns0)
         self.stats["spills"] += 1
         self.stats["bucket_runs"] = len(self.runs)
+        reg = obs.get_registry()
+        reg.counter("ingest.spills").inc()
+        reg.counter("ingest.bytes_spilled").inc(
+            self.stats["spilled_bytes"] - bytes0
+        )
+        reg.counter("ingest.bucket_runs").inc(len(self.runs) - nruns0)
 
     def _spill(self) -> None:
         if self._buffered == 0:

@@ -28,6 +28,7 @@ import os
 
 import numpy as np
 
+from repro import obs
 from repro.core.types import FileSink, PairSink, group_bounds, read_pair_file
 
 META_NAME = "meta.json"
@@ -67,10 +68,26 @@ def write_segment(
     (pairs streamed per chunk; default ``SYM_CHUNK_PAIRS``) — finalization
     memory is O(V + chunk) regardless of nnz.
     """
+    with obs.get_registry().span("ingest/segment_write", vocab=vocab_size) as sp:
+        nnz, nrows = _write_segment_files(
+            out_dir, rows, vocab_size, df=df, num_docs=num_docs,
+            source=source, sym_chunk_pairs=sym_chunk_pairs,
+        )
+        sp.set(nnz=nnz, rows=nrows)
+    reg = obs.get_registry()
+    reg.counter("ingest.rows_written").inc(nrows)
+    reg.counter("ingest.pairs_written").inc(nnz)
+    return out_dir
+
+
+def _write_segment_files(
+    out_dir, rows, vocab_size, *, df, num_docs, source, sym_chunk_pairs
+) -> tuple[int, int]:
     os.makedirs(out_dir, exist_ok=True)
     V = vocab_size
     row_ptr = np.zeros(V + 1, dtype=np.int64)
     nnz = 0
+    nrows = 0
     total = 0
     last_primary = -1
     # batch row payloads into ~8 MB writes: thousands of small rows must not
@@ -102,6 +119,7 @@ def write_segment(
                 continue
             row_ptr[primary + 1] = n
             nnz += n
+            nrows += 1
             cnts64 = np.ascontiguousarray(cnts, dtype=np.int64)
             total += int(cnts64.sum())
             pend_cols.append(np.ascontiguousarray(secs, dtype=np.int32))
@@ -132,7 +150,7 @@ def write_segment(
     }
     with open(os.path.join(out_dir, META_NAME), "w") as f:
         json.dump(meta, f, indent=2)
-    return out_dir
+    return nnz, nrows
 
 
 # pairs streamed per chunk by the symmetric build (~20 MB of temporaries)

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.store.requests import (
     KERNELS,
     SCORES,
@@ -102,6 +103,10 @@ class QueryEngine:
             gather/top-k kernel, bit-identical results).
         interpret: Pallas interpreter mode; ``None`` auto-selects it off-TPU
             so the pallas path runs (and is tested) on CPU CI.
+        registry: telemetry registry for ``query/execute`` spans and
+            cache/kernel-dispatch counters; ``None`` uses the process-global
+            one (disabled by default — see repro/obs). Serving workers pass
+            their own so metrics can cross the process boundary.
 
     Example::
 
@@ -118,6 +123,7 @@ class QueryEngine:
         cache_rows: int = 4096,
         kernel: str = "numpy",
         interpret: bool | None = None,
+        registry: "obs.Registry | None" = None,
     ):
         if kernel not in KERNELS:
             raise ValueError(f"unknown kernel {kernel!r}; have {KERNELS}")
@@ -132,6 +138,13 @@ class QueryEngine:
         self._num_docs = max(store.num_docs, 1)
         self._store_version = store.version
         self.stats = {"cache_hits": 0, "cache_misses": 0}
+        self._registry = registry
+
+    @property
+    def registry(self) -> "obs.Registry":
+        """The engine's telemetry registry (a fixed one if passed at
+        construction, otherwise whatever is globally installed now)."""
+        return self._registry if self._registry is not None else obs.get_registry()
 
     # ----------------------------------------------------------- cache
     def _maybe_invalidate(self) -> None:
@@ -196,7 +209,23 @@ class QueryEngine:
             else:
                 errors.setdefault(tag, payload[1])
 
-        execute_groups(self, coalesce(list(enumerate(reqs))), emit)
+        reg = self.registry
+        qstats: dict | None = {} if reg.enabled else None
+        hits0, misses0 = self.stats["cache_hits"], self.stats["cache_misses"]
+        with reg.span("query/execute", requests=len(reqs), kernel=self.kernel):
+            execute_groups(self, coalesce(list(enumerate(reqs))), emit, qstats)
+        if qstats is not None:
+            reg.counter("query.requests").inc(len(reqs))
+            for key, n in qstats.items():
+                # topk_launches / pair_launches are the kernel-dispatch
+                # counters; the rest are per-query volumes
+                reg.counter(f"query.{key}").inc(n)
+            reg.counter("query.cache_hits").inc(
+                self.stats["cache_hits"] - hits0
+            )
+            reg.counter("query.cache_misses").inc(
+                self.stats["cache_misses"] - misses0
+            )
         if errors:
             raise ValueError(errors[min(errors)])
         out = []

@@ -32,7 +32,17 @@ kernel launches over concurrent traffic:
   splits every top-k request by term ownership (``route_term``), so the N
   per-worker LRU row caches hold N disjoint slices of the vocabulary
   instead of N copies of the Zipf head. Per-worker hit rates are surfaced
-  in the server's final stats.
+  in the server's stats.
+* **Cross-process telemetry** — every worker keeps a private
+  :class:`repro.obs.Registry` (queue-wait / execute / request-latency
+  histograms, batch-size distribution, query counters) and publishes
+  picklable snapshots over the stats queue: periodically between
+  micro-batches when ``stats_interval_s`` is set, and always once at exit.
+  The parent merges them (histograms merge bucket-wise, so p50/p95/p99 are
+  true pooled percentiles) into a live ``server.stats()`` — no shared
+  memory, no extra sockets. A worker that dies mid-flight costs its last
+  interval of data, not the whole run: the parent serves its final
+  snapshot from the freshest one received and surfaces ``workers_lost``.
 * **Streaming top-k** — a ``TopKRequest(chunk=c)`` comes back as an iterator
   of score-ordered ``(ids, scores)`` column blocks: large-k responses cross
   the queue chunk by chunk instead of as one monolithic pickle.
@@ -45,6 +55,7 @@ Example (driver-side; see launch/cooc_serve.py for the full workload)::
     ids, scores = client.topk([3, 17], k=10, score="pmi")
     for ids_c, scores_c in client.topk_stream([3], k=5000, chunk=512):
         ...                                  # score-ordered chunks
+    server.stats()["server_timing"]          # live: queue-wait/execute p50/p95/p99
     stats = server.stop()                    # {"requests": ..., "cache_hit_rate": ...}
 
 Workers are **spawned** (never forked): JAX runtimes do not survive a fork,
@@ -65,6 +76,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.store.requests import (
     NeighboursRequest,
     PairCountsRequest,
@@ -99,6 +111,7 @@ class ServingConfig:
     kernel: str = "numpy"             # "numpy" | "pallas" (see store/query.py)
     cache_rows: int = 4096            # per-worker LRU capacity
     routing: bool = False             # hot-term routing: per-worker queues
+    stats_interval_s: float = 0.0     # 0 = snapshot only at worker exit
 
     def __post_init__(self):
         if self.workers < 1:
@@ -107,6 +120,8 @@ class ServingConfig:
             raise ValueError("batch_window_ms must be >= 0")
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if self.stats_interval_s < 0:
+            raise ValueError("stats_interval_s must be >= 0")
 
 
 # ---------------------------------------------------------------------------
@@ -132,8 +147,12 @@ def _serve_batch(engine, batch, response_q, worker_id: int, stats: dict) -> None
             finished.add(tag)
         response_q.put((cid, rid, part, parts, seq, last, ok, payload, m))
 
+    # envelopes are (cid, rid, part, parts, request[, t_submit]); the
+    # trailing submit timestamp (unix time, for queue-wait histograms) is
+    # optional so hand-built 5-tuple envelopes keep working
     tagged = [
-        ((cid, rid, part, parts), req) for cid, rid, part, parts, req in batch
+        ((cid, rid, part, parts), req)
+        for cid, rid, part, parts, req, *_ in batch
     ]
     try:
         execute_groups(engine, coalesce(tagged), emit, stats=stats)
@@ -145,6 +164,16 @@ def _serve_batch(engine, batch, response_q, worker_id: int, stats: dict) -> None
         for tag, _ in tagged:
             if tag not in finished:
                 emit(tag, False, ("serving_error", msg))
+
+
+def _worker_payload(stats: dict, engine, registry) -> dict:
+    """One picklable stats-queue snapshot: the worker's counters dict plus
+    its metrics registry snapshot (mergeable histograms included)."""
+    out = dict(stats)
+    out.update(engine.stats)  # cache_hits / cache_misses
+    hits, misses = out["cache_hits"], out["cache_misses"]
+    out["cache_hit_rate"] = round(hits / max(hits + misses, 1), 4)
+    return {"stats": out, "metrics": registry.snapshot()}
 
 
 def _worker_main(
@@ -160,18 +189,39 @@ def _worker_main(
     queue under the latency budget, serve the coalesced batch. Between
     batches the store manifest is refreshed, so parent-process mutations
     (append/compact) invalidate this worker's row cache exactly like they
-    invalidate a direct engine's."""
+    invalidate a direct engine's.
+
+    Telemetry rides a private enabled :class:`repro.obs.Registry` (the
+    process-global one stays disabled): per-request queue-wait and latency,
+    per-batch execute time and size, query counters via the engine. A
+    ``("snap", id, payload)`` snapshot goes on the stats queue at most every
+    ``stats_interval_s`` seconds (0 = never), and a ``("final", ...)`` one
+    always goes out at exit — so the parent loses at most one interval of
+    data if this process dies."""
     from repro.store.query import QueryEngine
     from repro.store.segments import Store
 
+    reg = obs.Registry(enabled=True, max_events=10_000)
     engine = QueryEngine(
-        Store.open(store_path), cache_rows=cfg.cache_rows, kernel=cfg.kernel
+        Store.open(store_path), cache_rows=cfg.cache_rows, kernel=cfg.kernel,
+        registry=reg,
     )
     stats = {k: 0 for k in _STAT_KEYS}
+    h_wait = reg.histogram("serving/queue_wait_s")
+    h_exec = reg.histogram("serving/execute_s")
+    h_lat = reg.histogram("serving/request_latency_s")
+    h_bsz = reg.histogram("serving/batch_requests")
     window_s = cfg.batch_window_ms / 1e3
+    interval = cfg.stats_interval_s
+    last_pub = time.monotonic()
     stop = False
     while not stop:
-        req = request_q.get()
+        try:
+            req = request_q.get(timeout=interval or None)
+        except queue.Empty:  # idle: keep the parent's live view fresh
+            stats_q.put(("snap", worker_id, _worker_payload(stats, engine, reg)))
+            last_pub = time.monotonic()
+            continue
         if req is _STOP:
             break
         batch = [req]
@@ -191,11 +241,27 @@ def _worker_main(
             batch.append(nxt)
         if engine.store.refresh():  # cross-process append/compact visibility
             stats["store_refreshes"] += 1
+        # queue wait = batch start minus client submit; unix time is the one
+        # clock both processes share (perf_counter epochs differ per process)
+        t_start = time.time()
+        for item in batch:
+            if len(item) > 5 and item[5] is not None:
+                h_wait.record(max(t_start - item[5], 0.0))
+        t0 = time.perf_counter()
         _serve_batch(engine, batch, response_q, worker_id, stats)
-    stats.update(engine.stats)  # cache_hits / cache_misses
-    hits, misses = stats["cache_hits"], stats["cache_misses"]
-    stats["cache_hit_rate"] = round(hits / max(hits + misses, 1), 4)
-    stats_q.put((worker_id, stats))
+        h_exec.record(time.perf_counter() - t0)
+        h_bsz.record(len(batch))
+        reg.gauge("serving/batch_window_occupancy").set(
+            len(batch) / cfg.max_batch
+        )
+        t_end = time.time()
+        for item in batch:
+            if len(item) > 5 and item[5] is not None:
+                h_lat.record(max(t_end - item[5], 0.0))
+        if interval and time.monotonic() - last_pub >= interval:
+            stats_q.put(("snap", worker_id, _worker_payload(stats, engine, reg)))
+            last_pub = time.monotonic()
+    stats_q.put(("final", worker_id, _worker_payload(stats, engine, reg)))
 
 
 # ---------------------------------------------------------------------------
@@ -297,7 +363,8 @@ class CoocClient:
             for rp in parts:
                 self._server._submit(
                     rp.worker,
-                    (self._client_id, rid, rp.part, rp.parts, rp.request),
+                    (self._client_id, rid, rp.part, rp.parts, rp.request,
+                     time.time()),
                 )
             entries.append((rid, req))
         out = []
@@ -434,15 +501,21 @@ class CoocServer:
     routing.
 
     Lifecycle: ``start()`` spawns the workers and the response router;
-    ``client()`` mints per-thread client handles; ``stop()`` drains the
-    workers and returns aggregated serving stats (including the aggregate
-    and per-worker row-cache hit rates). Usable as a context manager.
+    ``client()`` mints per-thread client handles; ``stats()`` is the live
+    (and, after stop, final) aggregated view — counters summed and latency
+    histograms merged across workers, with server-side queue-wait / execute
+    / request-latency percentiles under ``"server_timing"``; ``stop()``
+    drains the workers and returns the final stats. A worker that crashes
+    costs its last reporting interval of data, not the run: its freshest
+    snapshot stands in and ``stats()["workers_lost"]`` counts it. Usable as
+    a context manager.
 
     Example::
 
         with CoocServer(path, workers=4, routing=True) as server:
             ids, scores = server.client().topk([3], k=10)
-        # __exit__ stopped the workers; server.stats holds the aggregate
+            server.stats()["requests"]       # live merged view
+        # __exit__ stopped the workers; server.stats() is now final
     """
 
     def __init__(
@@ -455,6 +528,7 @@ class CoocServer:
         kernel: str = "numpy",
         cache_rows: int = 4096,
         routing: bool = False,
+        stats_interval_s: float = 0.0,
     ):
         from repro.store.segments import Store
 
@@ -476,8 +550,11 @@ class CoocServer:
             kernel=self.planner.kernel,
             cache_rows=cache_rows,
             routing=self.planner.routing,
+            stats_interval_s=stats_interval_s,
         )
-        self.stats: dict = {}
+        self._stats_final: dict = {}
+        self._worker_last: dict[int, dict] = {}   # freshest payload per worker
+        self._worker_final: set[int] = set()
         self._procs: list = []
         self._boxes: dict[int, queue.Queue] = {}
         self._client_ids = itertools.count()
@@ -573,44 +650,38 @@ class CoocServer:
         self._boxes[cid] = box
         return CoocClient(self, cid, box)
 
-    def stop(self, timeout: float = 120.0) -> dict:
-        """Drain the workers and return aggregated serving stats."""
-        if not self._started:
-            return self.stats
-        if self.config.routing:
-            for q in self._request_qs:
-                q.put(_STOP)
-        else:
-            for _ in self._procs:
-                self._request_qs[0].put(_STOP)
-        per_worker = {}
-        deadline = time.monotonic() + timeout
-        for _ in self._procs:
+    # ------------------------------------------------------------ telemetry
+    def _drain_stats_q(self) -> None:
+        """Pull every pending worker snapshot off the stats queue. Each
+        worker's freshest payload wins; ``("final", ...)`` marks a clean
+        exit."""
+        while True:
             try:
-                wid, stats = self._stats_q.get(
-                    timeout=max(deadline - time.monotonic(), 0.1)
-                )
+                kind, wid, payload = self._stats_q.get_nowait()
             except queue.Empty:
-                dead = [
-                    (p.pid, p.exitcode)
-                    for p in self._procs
-                    if p.exitcode not in (0, None)
-                ]
-                for p in self._procs:
-                    p.terminate()
-                raise RuntimeError(
-                    f"serving worker(s) failed to report stats within "
-                    f"{timeout}s (dead workers: {dead or 'none'})"
-                ) from None
-            per_worker[wid] = stats
-        for p in self._procs:
-            p.join(timeout=max(deadline - time.monotonic(), 0.1))
-            if p.is_alive():  # pragma: no cover - workers already reported
-                p.terminate()
-        self._response_q.put(_STOP)
-        self._router.join(timeout=5)
-        self._started = False
+                return
+            self._worker_last[wid] = payload
+            if kind == "final":
+                self._worker_final.add(wid)
 
+    def stats(self) -> dict:
+        """Aggregated serving stats: counters summed and latency histograms
+        merged across workers. Live (from the freshest per-worker snapshots)
+        while the server runs; final after :meth:`stop`.
+
+        Keys of note: ``server_timing`` (queue-wait / execute /
+        request-latency p50/p95/p99 in ms, from the merged histograms),
+        ``workers_lost`` (workers that never sent a final snapshot),
+        ``metrics`` (the raw merged snapshot — feed it to
+        ``repro.obs.prometheus_text``), ``per_worker`` (each worker's own
+        counters, e.g. per-worker ``cache_hit_rate`` under routing)."""
+        if not self._started:
+            return self._stats_final
+        self._drain_stats_q()
+        return self._aggregate(live=True)
+
+    def _aggregate(self, *, live: bool, workers_lost: int = 0) -> dict:
+        per_worker = {w: p["stats"] for w, p in self._worker_last.items()}
         agg = {
             k: sum(w[k] for w in per_worker.values())
             for k in next(iter(per_worker.values()))
@@ -628,15 +699,83 @@ class CoocServer:
                 / max(agg["cache_hits"] + agg["cache_misses"], 1),
                 4,
             )
-        self.stats = {
+        metrics = obs.merge_snapshots(
+            [self._worker_last[w]["metrics"] for w in sorted(self._worker_last)]
+        )
+        timing = {}
+        for key, hname in (
+            ("queue_wait_ms", "serving/queue_wait_s"),
+            ("execute_ms", "serving/execute_s"),
+            ("request_latency_ms", "serving/request_latency_s"),
+        ):
+            state = metrics["histograms"].get(hname)
+            if state:
+                h = obs.Histogram.from_state(state)
+                timing[key] = {
+                    "p50": round(h.percentile(50) * 1e3, 3),
+                    "p95": round(h.percentile(95) * 1e3, 3),
+                    "p99": round(h.percentile(99) * 1e3, 3),
+                    "mean": round(h.mean * 1e3, 3),
+                    "count": h.count,
+                }
+        return {
             "workers": self.config.workers,
             "kernel": self.config.kernel,
             "batch_window_ms": self.config.batch_window_ms,
             "routing": self.config.routing,
+            "live": live,
             **agg,
+            "workers_lost": workers_lost,
+            "server_timing": timing,
+            "metrics": metrics,
             "per_worker": [per_worker[w] for w in sorted(per_worker)],
         }
-        return self.stats
+
+    def stop(self, timeout: float = 120.0) -> dict:
+        """Drain the workers and return the final aggregated serving stats.
+
+        A worker that died without its final snapshot no longer takes the
+        whole ``stop()`` down: its freshest periodic snapshot (if any)
+        stands in, and the loss is surfaced as ``stats()["workers_lost"]``
+        — silent stats loss was the old failure mode."""
+        if not self._started:
+            return self._stats_final
+        if self.config.routing:
+            for q in self._request_qs:
+                q.put(_STOP)
+        else:
+            for _ in self._procs:
+                self._request_qs[0].put(_STOP)
+        expected = set(range(len(self._procs)))
+        deadline = time.monotonic() + timeout
+        while self._worker_final < expected and time.monotonic() < deadline:
+            try:
+                kind, wid, payload = self._stats_q.get(timeout=0.1)
+            except queue.Empty:
+                missing = expected - self._worker_final
+                if all(self._procs[w].exitcode is not None for w in missing):
+                    break  # the dead will never report: stop waiting
+                continue
+            self._worker_last[wid] = payload
+            if kind == "final":
+                self._worker_final.add(wid)
+        if self._worker_final < expected:
+            # exitcodes can appear before the queue pipe is fully flushed:
+            # one grace drain before declaring anyone lost
+            time.sleep(0.05)
+            self._drain_stats_q()
+        workers_lost = len(expected - self._worker_final)
+        for p in self._procs:
+            p.join(timeout=max(deadline - time.monotonic(), 0.1))
+            if p.is_alive():
+                p.terminate()
+        self._response_q.put(_STOP)
+        self._router.join(timeout=5)
+        self._started = False
+        self._stats_final = self._aggregate(
+            live=False, workers_lost=workers_lost
+        )
+        return self._stats_final
 
     def __enter__(self) -> "CoocServer":
         return self.start()

@@ -13,7 +13,10 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOC_PAGES = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
 LINKED_PAGES = DOC_PAGES + [os.path.join(ROOT, "README.md")]
 
-REQUIRED_PAGES = {"architecture.md", "formats.md", "methods.md", "serving.md"}
+REQUIRED_PAGES = {
+    "architecture.md", "formats.md", "methods.md", "serving.md",
+    "observability.md",
+}
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)

@@ -44,6 +44,8 @@ def test_serving_config_validation():
         ServingConfig(max_batch=0)
     with pytest.raises(ValueError, match="batch_window_ms"):
         ServingConfig(batch_window_ms=-1.0)
+    with pytest.raises(ValueError, match="stats_interval_s"):
+        ServingConfig(stats_interval_s=-0.5)
 
 
 # ------------------------------------------------- batch coalescing (unit)
@@ -189,7 +191,7 @@ def test_server_multi_client_matches_engine(store_path, coll):
             t.join(timeout=180)
     assert not errors, errors
 
-    stats = server.stats
+    stats = server.stats()
     assert stats["workers"] == 2 and stats["routing"] is False
     assert stats["requests"] == n_clients * reqs_per_client * 2
     assert stats["topk_queries"] == n_clients * reqs_per_client * 8
@@ -233,8 +235,8 @@ def test_server_routed_matches_engine_and_partitions_caches(store_path, coll):
                 )
             nids, ncnts = client.neighbours(1)
             np.testing.assert_array_equal(nids, ref.neighbours(1)[0])
-        hit_rates[routing] = server.stats["cache_hit_rate"]
-        assert server.stats["routing"] is routing
+        hit_rates[routing] = server.stats()["cache_hit_rate"]
+        assert server.stats()["routing"] is routing
     assert hit_rates[True] > hit_rates[False], hit_rates
 
 
@@ -280,7 +282,7 @@ def test_server_sees_parent_store_mutation(coll, tmp_path):
         np.testing.assert_array_equal(ids, ref.topk([1], k=4)[0])
         np.testing.assert_array_equal(scores, ref.topk([1], k=4)[1])
         assert np.all(scores[tscores >= 0] >= tscores[tscores >= 0])
-    assert sum(w["store_refreshes"] for w in server.stats["per_worker"]) >= 1
+    assert sum(w["store_refreshes"] for w in server.stats()["per_worker"]) >= 1
 
 
 def test_server_error_propagation_and_restart_guard(store_path):
@@ -313,7 +315,7 @@ def test_client_rejects_invalid_requests_before_submit(store_path):
         ids, _ = client.topk([1], k=3)  # server healthy, nothing poisoned
         assert ids.shape == (1, 3)
     # the invalid requests never became envelopes: exactly one served
-    assert server.stats["requests"] == 1
+    assert server.stats()["requests"] == 1
 
 
 def test_client_buffers_bounded_after_errors_and_dropped_streams(store_path):
@@ -354,6 +356,91 @@ def test_client_buffers_bounded_after_errors_and_dropped_streams(store_path):
         assert not client._positions
         ids, _ = client.topk(np.arange(8), k=3)
         assert ids.shape == (8, 3)
+
+
+# --------------------------------------------------- telemetry (satellites)
+def test_server_stats_include_server_side_timing(store_path):
+    """Satellite: percentiles must exist on the server side of the queue —
+    queue-wait, execute, and total request latency come from worker
+    histograms merged across processes, not client wall clocks."""
+    with CoocServer(store_path, workers=2, batch_window_ms=1.0) as server:
+        client = server.client()
+        for _ in range(10):
+            client.topk([1, 2, 3], k=5)
+    stats = server.stats()
+    timing = stats["server_timing"]
+    assert set(timing) == {"queue_wait_ms", "execute_ms", "request_latency_ms"}
+    # every served request was measured, and latency >= its queue-wait share
+    assert timing["queue_wait_ms"]["count"] == stats["requests"] == 10
+    assert timing["request_latency_ms"]["count"] == 10
+    assert timing["execute_ms"]["count"] == stats["batches"]
+    for d in timing.values():
+        assert d["p50"] <= d["p95"] <= d["p99"]
+        assert d["mean"] > 0
+    assert timing["request_latency_ms"]["p50"] >= timing["queue_wait_ms"]["p50"]
+    # the merged raw metrics snapshot travels too (for prometheus export)
+    hists = stats["metrics"]["histograms"]
+    assert "serving/queue_wait_s" in hists and "serving/execute_s" in hists
+    assert stats["workers_lost"] == 0
+
+
+def test_server_live_stats_with_periodic_snapshots(store_path):
+    """stats() on a *running* server merges the freshest periodic snapshot
+    from each worker (stats_interval_s), without stopping anything."""
+    import time as _time
+
+    with CoocServer(
+        store_path, workers=2, batch_window_ms=1.0, stats_interval_s=0.05
+    ) as server:
+        client = server.client()
+        for _ in range(8):
+            client.topk([1, 2], k=4)
+        deadline = _time.monotonic() + 30
+        live = server.stats()
+        while live["requests"] < 8 and _time.monotonic() < deadline:
+            _time.sleep(0.05)
+            live = server.stats()
+        assert live["live"] is True
+        assert live["requests"] == 8
+        assert live["server_timing"]["queue_wait_ms"]["count"] == 8
+        ids, _ = client.topk([3], k=4)  # still serving
+        assert ids.shape == (1, 4)
+    final = server.stats()
+    assert final["live"] is False and final["requests"] == 9
+
+
+def test_server_counts_lost_workers_not_silent(store_path):
+    """Satellite: a worker that dies without a final snapshot must be
+    *counted*, not silently dropped from the stats — its last periodic
+    snapshot stands in for its traffic. Routed mode: each worker owns its
+    own request queue, so killing one never wedges the survivor."""
+    import os as _os
+    import signal as _signal
+    import time as _time
+
+    with CoocServer(
+        store_path, workers=2, batch_window_ms=1.0,
+        routing=True, stats_interval_s=0.05,
+    ) as server:
+        client = server.client()
+        for _ in range(10):
+            client.topk(np.arange(16), k=4)  # splits across both workers
+        # let both workers publish a periodic snapshot covering the traffic
+        deadline = _time.monotonic() + 30
+        while (
+            server.stats()["requests"] < 20 and _time.monotonic() < deadline
+        ):
+            _time.sleep(0.05)
+        assert server.stats()["requests"] == 20
+        victim = server._procs[0]
+        _os.kill(victim.pid, _signal.SIGKILL)
+        victim.join(timeout=30)
+    stats = server.stats()
+    assert stats["workers_lost"] == 1
+    # the victim's periodic snapshot stood in: no requests went missing
+    assert stats["requests"] == 20
+    assert stats["server_timing"]["queue_wait_ms"]["count"] == 20
+    assert len(stats["per_worker"]) == 2
 
 
 def test_server_rejects_bad_args(store_path, tmp_path):
