@@ -78,7 +78,10 @@ def _build_once(fn, c, workdir: str, budget: int, label: str, **kwargs) -> dict:
     """One timed end-to-end ingest: count through a budgeted SpillSink into a
     fresh store, stop the clock when a second handle sees the segment."""
     store_dir = os.path.join(workdir, f"store_{label}")
-    store = Store.create(store_dir, c.vocab_size)
+    # pinned to v1 raw segments: the cross-method identity gate compares the
+    # raw .bin arrays byte-for-byte (v2 compressed identity is gated by
+    # store_bench.run_storage on decoded query results instead)
+    store = Store.create(store_dir, c.vocab_size, segment_version=1)
     reader = Store.open(store_dir)  # the "serving" handle, opened up front
     t0 = time.perf_counter()
     with SpillSink(c.vocab_size, memory_budget_pairs=budget) as sink:

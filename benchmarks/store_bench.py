@@ -12,6 +12,12 @@ Two entry points:
   the multi-process shared-mmap serving layer, reporting p50/p99 latency and
   QPS per topology as a JSON document (``BENCH_serving.json`` in CI — the
   first entries of the perf trajectory).
+* ``run_storage()`` — the compressed-storage benchmark (ISSUE 7): the same
+  corpus built as a v1 raw store and a v2 block-compressed store, gated on
+  bytes/pair (compression ratio >= 2x), byte-identity across every query
+  path, cold pair-lookup latency (the bloom fast path), and a background
+  compaction merging the v2 segments while the multi-worker serving layer
+  answers queries against them. Emits ``BENCH_storage.json``.
 * ``run_routing()`` — the hot-term-routing benchmark (ISSUE 4): the same
   Zipf-skewed workload served by ``workers`` unrouted (shared queue, every
   worker caches the same hot rows) vs routed (terms hashed to their cache
@@ -25,6 +31,8 @@ Two entry points:
         --json BENCH_serving.json --docs 4000 --workers 2 --clients 3
     PYTHONPATH=src:. python benchmarks/store_bench.py \
         --routing-json BENCH_routing.json --workers 4 --clients 4
+    PYTHONPATH=src:. python benchmarks/store_bench.py \
+        --storage-json BENCH_storage.json
 """
 
 from __future__ import annotations
@@ -273,6 +281,183 @@ def run_routing(
     return out
 
 
+# ---------------------------------------------------------------------------
+# storage benchmark (compression ratio + cold lookups + live compaction)
+# ---------------------------------------------------------------------------
+
+
+def run_storage(
+    json_path: str | None = None,
+    *,
+    docs: int = 3_000,
+    vocab: int = 2_048,
+    segments: int = 3,
+    workers: int = 2,
+    queries: int = 512,
+    batch: int = 32,
+    topk: int = TOPK,
+    kernel: str = "numpy",
+    seed: int = 5,
+) -> dict:
+    """Compressed-storage benchmark (ISSUE 7): the same corpus built as a
+    v1 raw store and a v2 block-compressed store, then gated three ways.
+
+    * **bytes/pair** — total segment bytes over nnz for both formats;
+      asserts the compression ratio is >= 2x.
+    * **byte-identity** — top-k (count/pmi/dice), pair_counts, and
+      neighbours must return bit-identical results on both stores (the
+      codecs are lossless; anything else is a decoder bug).
+    * **cold pair lookups** — fresh-handle random pair batches (mostly
+      absent pairs, the cold-cache worst case), reporting latency per
+      1k pairs for both formats plus the v2 bloom negative rate.
+
+    Finally the v2 store's segments are merged by a **background
+    compaction process while the multi-worker serving layer is answering
+    queries against it** — served results must be byte-identical before
+    and after the workers pick up the swap."""
+    import time
+
+    from repro import obs
+    from repro.data.preprocess import shard_documents
+    from repro.store import CoocServer, Store, segment_bytes
+
+    base = tempfile.mkdtemp(prefix="storage_bench_")
+    c = synthetic_zipf_collection(docs, vocab=vocab, mean_len=30, seed=seed)
+    stores: dict[str, Store] = {}
+    build_s: dict[str, float] = {}
+    for fmt, ver in (("v1", 1), ("v2", 2)):
+        st = Store.create(
+            os.path.join(base, fmt), c.vocab_size, segment_version=ver
+        )
+        t0 = time.perf_counter()
+        for shard in shard_documents(c, segments):
+            st.append_collection(shard, memory_budget_pairs=BUDGET_PAIRS)
+        build_s[fmt] = round(time.perf_counter() - t0, 3)
+        stores[fmt] = st
+    s1, s2 = stores["v1"], stores["v2"]
+
+    # ------------------------------------------------------- bytes per pair
+    def store_bytes(st: Store) -> int:
+        return sum(
+            segment_bytes(os.path.join(st.path, n)) for n in st.segment_names
+        )
+
+    nnz = sum(seg.nnz for seg in s1.segments)
+    bytes_v1, bytes_v2 = store_bytes(s1), store_bytes(s2)
+    ratio = bytes_v1 / bytes_v2
+    assert ratio >= 2.0, (
+        f"v2 compression ratio {ratio:.2f}x below the 2x gate "
+        f"({bytes_v1} -> {bytes_v2} bytes)"
+    )
+
+    # ------------------------------------------- byte-identity, every path
+    e1, e2 = QueryEngine(s1, kernel=kernel), QueryEngine(s2, kernel=kernel)
+    rng = np.random.default_rng(seed + 1)
+    identical = True
+    for _ in range(max(queries // batch, 1)):
+        terms = rng.integers(0, vocab, size=batch)
+        for score in ("count", "pmi", "dice"):
+            a, b = e1.topk(terms, k=topk, score=score), e2.topk(
+                terms, k=topk, score=score
+            )
+            identical &= (
+                a[0].tobytes() == b[0].tobytes()
+                and a[1].tobytes() == b[1].tobytes()
+            )
+        pairs = rng.integers(0, vocab, size=(batch, 2))
+        identical &= (
+            e1.pair_counts(pairs).tobytes() == e2.pair_counts(pairs).tobytes()
+        )
+    for t in rng.integers(0, vocab, size=256):
+        a, b = s1.neighbours(int(t)), s2.neighbours(int(t))
+        identical &= (
+            a[0].tobytes() == b[0].tobytes()
+            and a[1].tobytes() == b[1].tobytes()
+        )
+    assert identical, "v1 vs v2 query results diverged"
+
+    # ------------------------------------------------- cold pair lookups
+    def cold_pairs_ms(path: str) -> tuple[float, dict]:
+        reg = obs.Registry(enabled=True)
+        st = Store.open(path, registry=reg)  # fresh handle: cold caches
+        prng = np.random.default_rng(seed + 2)  # same pairs for both stores
+        pairs = prng.integers(0, vocab, size=(2_000, 2))
+        t0 = time.perf_counter()
+        st.pair_counts(pairs)
+        ms = (time.perf_counter() - t0) * 1e3
+        snap = reg.snapshot()["counters"]
+        return round(ms / (len(pairs) / 1e3), 3), snap
+
+    cold_v1_ms, _ = cold_pairs_ms(s1.path)
+    cold_v2_ms, v2_counters = cold_pairs_ms(s2.path)
+    bloom_checks = v2_counters.get("storage.bloom_checks", 0)
+    bloom_negative = v2_counters.get("storage.bloom_negative", 0)
+
+    # ------------------------- background compaction under live serving
+    server = CoocServer(
+        s2.path, workers=workers, batch_window_ms=1.0, kernel=kernel
+    ).start()
+    client = server.client()
+    fixed_terms = rng.integers(0, vocab, size=batch)
+    before = client.topk(fixed_terms, k=topk, score="pmi")
+    handle = s2.compact_background(names=s2.segment_names)
+    assert handle is not None, "nothing to compact (need >= 2 segments)"
+    queries_during = 0
+    t0 = time.perf_counter()
+    while handle.alive():
+        client.topk(rng.integers(0, vocab, size=batch), k=topk, score="pmi")
+        queries_during += 1
+    compact_result = handle.join(timeout=300)
+    compact_s = round(time.perf_counter() - t0, 3)
+    # re-ask the fixed batch post-merge: counts are additive, so whether a
+    # worker has refreshed onto the merged segment yet or is still serving
+    # from its (unlinked but mapped) originals, the bytes must not change
+    after = client.topk(fixed_terms, k=topk, score="pmi")
+    served_identical = (
+        before[0].tobytes() == after[0].tobytes()
+        and before[1].tobytes() == after[1].tobytes()
+    )
+    sstats = server.stop()
+    assert served_identical, "served results changed across the compaction"
+    s2.refresh()
+    assert len(s2.segment_names) == 1, "compaction did not swap the manifest"
+
+    out = {
+        "suite": "storage",
+        "config": {
+            "docs": docs, "vocab": vocab, "segments": segments,
+            "workers": workers, "queries": queries, "batch": batch,
+            "topk": topk, "kernel": kernel,
+        },
+        "nnz": int(nnz),
+        "build_s": build_s,
+        "bytes": {"v1": bytes_v1, "v2": bytes_v2},
+        "bytes_per_pair": {
+            "v1": round(bytes_v1 / nnz, 2), "v2": round(bytes_v2 / nnz, 2),
+        },
+        "compression_ratio": round(ratio, 2),
+        "query_identity": bool(identical),
+        "cold_pair_ms_per_1k": {"v1": cold_v1_ms, "v2": cold_v2_ms},
+        "bloom": {
+            "checks": int(bloom_checks),
+            "negative": int(bloom_negative),
+            "negative_rate": round(bloom_negative / max(bloom_checks, 1), 4),
+        },
+        "compaction_under_serving": {
+            "compact_s": compact_s,
+            "queries_during": queries_during,
+            "served_identical": served_identical,
+            "merged": compact_result["merged"],
+            "storage_stats": sstats.get("storage", {}),
+        },
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"[storage bench] wrote {json_path}")
+    return out
+
+
 if __name__ == "__main__":
     # The CLI is the serving benchmark; the CSV oracle-gate suite runs via
     # `benchmarks/run.py store` (so serving flags can never be silently
@@ -287,6 +472,13 @@ if __name__ == "__main__":
         help="run the routed-vs-unrouted benchmark and write its JSON here "
              "(skips the plain serving benchmark unless --json is also given)",
     )
+    ap.add_argument(
+        "--storage-json", default=None,
+        help="run the compressed-storage benchmark (v1 vs v2 bytes/pair, "
+             "byte-identity, cold lookups, compaction under serving) and "
+             "write its JSON here (skips the other benchmarks unless their "
+             "flags are also given)",
+    )
     ap.add_argument("--docs", type=int, default=4_000)
     ap.add_argument("--vocab", type=int, default=1_024)
     ap.add_argument("--workers", type=int, default=2)
@@ -298,6 +490,11 @@ if __name__ == "__main__":
                     help="per-worker LRU capacity for the routing benchmark")
     ap.add_argument("--kernel", default="numpy", choices=["numpy", "pallas"])
     args = ap.parse_args()
+    if args.storage_json:
+        result = run_storage(
+            args.storage_json, vocab=args.vocab, workers=args.workers,
+            queries=args.queries, batch=args.batch, kernel=args.kernel,
+        )
     if args.routing_json:
         result = run_routing(
             args.routing_json, docs=args.docs, vocab=args.vocab,
@@ -305,7 +502,7 @@ if __name__ == "__main__":
             queries=args.queries, batch=args.batch, cache_rows=args.cache_rows,
             batch_window_ms=args.batch_window_ms, kernel=args.kernel,
         )
-    if args.json or not args.routing_json:
+    if args.json or not (args.routing_json or args.storage_json):
         result = run_serving(
             args.json, docs=args.docs, vocab=args.vocab, workers=args.workers,
             clients=args.clients, queries=args.queries, batch=args.batch,

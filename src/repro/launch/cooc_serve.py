@@ -24,6 +24,16 @@ each term to the worker that owns its cache row, so per-worker LRU caches
 partition the vocabulary instead of duplicating the Zipf head (the stats
 JSON reports the aggregate and per-worker ``cache_hit_rate``).
 
+``--store-format v2`` builds block-compressed segments (codecs + bloom
+filter, docs/formats.md) instead of the raw v1 arrays; query results are
+byte-identical either way. ``--build-segments N`` shards the build into N
+segments, and ``--compact`` launches a background size-tiered compaction
+(``Store.compact_background``) once serving is up, merging those segments
+in a separate process *while the workers answer queries* — the stats JSON
+gains a ``compaction`` key with the merge result, and multi-worker stats
+include the ``storage`` codec counters (blocks decoded, block-cache hit
+rate, bloom negatives).
+
 ``--kernel`` picks the score-and-select backend for either topology:
 ``numpy`` (jitted reference) or ``pallas`` (fused top-k gather kernel;
 interpreter mode off-TPU). Results are bit-identical between the two.
@@ -75,6 +85,9 @@ def _build_or_open(
     store_path: str | None,
     budget_pairs: int,
     seed: int,
+    *,
+    segment_version: int | None = None,
+    build_segments: int = 1,
 ) -> tuple[Store, str, float]:
     if store_path and Store.exists(store_path):
         return Store.open(store_path), store_path, 0.0
@@ -83,12 +96,33 @@ def _build_or_open(
     )
     c = synthetic_zipf_collection(docs, vocab=vocab, mean_len=40, seed=seed)
     t0 = time.perf_counter()
-    store, seg = count_to_store(method, c, store_path, memory_budget_pairs=budget_pairs)
+    if segment_version is not None or build_segments > 1:
+        # pre-create so the manifest pins the segment format; every append
+        # (count_to_store opens an existing store) inherits it
+        store = Store.create(
+            store_path, c.vocab_size, segment_version=segment_version
+        )
+    if build_segments > 1:
+        # shard the corpus into several appends: a multi-segment store is
+        # what --compact merges while serving runs against it
+        from repro.data.preprocess import shard_documents
+
+        for shard in shard_documents(c, build_segments):
+            store.append_collection(
+                shard, method=method, memory_budget_pairs=budget_pairs
+            )
+        seg = store.segments[-1]
+    else:
+        store, seg = count_to_store(
+            method, c, store_path, memory_budget_pairs=budget_pairs
+        )
     build_s = time.perf_counter() - t0
     print(
         f"[build] {seg.nnz} pairs from {docs} docs via "
         f"{seg.meta.get('source', method)} in {build_s:.2f}s "
-        f"({docs / build_s * 3600:.0f} docs/hour) -> {store_path}"
+        f"({docs / build_s * 3600:.0f} docs/hour) -> {store_path} "
+        f"(format v{store.segment_version}, "
+        f"{len(store.segment_names)} segment(s))"
     )
     return store, store_path, build_s
 
@@ -138,15 +172,26 @@ def _serve_inprocess(
     }
 
 
+def _start_compaction(store: Store):
+    """Kick off the background merge ``--compact`` asks for: every current
+    segment when several exist (None when there is nothing to merge)."""
+    names = store.segment_names
+    return store.compact_background(names=names) if len(names) > 1 else None
+
+
 def _serve_multiprocess(
     store_path, draw, queries, batch, topk, score,
     workers, clients, batch_window_ms, kernel, seed,
     routing=False, cache_rows=4096, metrics_interval=0.0,
-    keep_metrics=False,
+    keep_metrics=False, compact_store=None,
 ) -> dict:
     """Two phases (all-clients top-k, then all-clients pair lookups),
     barrier-aligned so each workload's QPS is measured against its own
-    wall-clock — directly comparable to the in-process numbers."""
+    wall-clock — directly comparable to the in-process numbers.
+
+    ``compact_store`` (from ``--compact``) starts a background compaction
+    right after the workers spawn: the merge commits mid-workload and the
+    workers pick the new manifest up via their between-batch refresh()."""
     per_client = max(queries // (batch * clients), 1)
     lat_topk: list[float] = []
     lat_pair: list[float] = []
@@ -160,6 +205,7 @@ def _serve_multiprocess(
         kernel=kernel, routing=routing, cache_rows=cache_rows,
         stats_interval_s=metrics_interval,
     ).start()
+    compact_handle = _start_compaction(compact_store) if compact_store else None
 
     stop_dump = threading.Event()
     dumper = None
@@ -239,7 +285,7 @@ def _serve_multiprocess(
     }
     total_topk = len(lat_topk) * batch
     total_pair = len(lat_pair) * batch
-    return {
+    out = {
         "clients": clients,
         "topk_qps": round(total_topk / phase_wall("topk")),
         **{f"topk_{k}": v for k, v in _percentiles(lat_topk).items()},
@@ -249,6 +295,9 @@ def _serve_multiprocess(
         "workers_lost": sstats.get("workers_lost", 0),
         "serving": serving,
     }
+    if compact_handle is not None:
+        out["compaction"] = compact_handle.join(timeout=300)
+    return out
 
 
 def serve(
@@ -271,17 +320,31 @@ def serve(
     json_out: str | None = None,
     trace_out: str | None = None,
     metrics_interval: float = 0.0,
+    store_format: str | None = None,
+    build_segments: int = 1,
+    compact: bool = False,
 ) -> dict:
     """Build/open a store and replay a Zipf workload; returns the stats dict
-    (and writes it as JSON to ``json_out`` if given)."""
+    (and writes it as JSON to ``json_out`` if given).
+
+    ``store_format`` ("v1" raw / "v2" compressed) pins the segment format of
+    a freshly built store; ``build_segments`` shards the corpus into that
+    many appended segments; ``compact`` merges them in a background process
+    **while the workload runs** (the serving workers pick up the swap via
+    refresh()) and reports the result under ``"compaction"``."""
     telemetry = bool(trace_out) or metrics_interval > 0
     reg = obs.configure(enabled=True) if telemetry else obs.get_registry()
+    segment_version = (
+        None if store_format is None else int(store_format.lstrip("v"))
+    )
     store, store_path, build_s = _build_or_open(
-        docs, vocab, method, store_path, budget_pairs, seed
+        docs, vocab, method, store_path, budget_pairs, seed,
+        segment_version=segment_version, build_segments=build_segments,
     )
     draw = _zipf_sampler(store, seed)
 
     if workers <= 0:
+        compact_handle = _start_compaction(store) if compact else None
         stop_dump = threading.Event()
         dumper = None
         if metrics_interval > 0:
@@ -299,16 +362,21 @@ def serve(
             stop_dump.set()
             if dumper is not None:
                 dumper.join(timeout=5)
+        if compact_handle is not None:
+            served["compaction"] = compact_handle.join(timeout=300)
     else:
         served = _serve_multiprocess(
             store_path, draw, queries, batch, topk, score,
             workers, clients, batch_window_ms, kernel, seed,
             routing=routing, cache_rows=cache_rows,
             metrics_interval=metrics_interval, keep_metrics=telemetry,
+            compact_store=store if compact else None,
         )
 
+    store.refresh()  # a background compaction may have swapped segments
     stats = {
         "store": store_path,
+        "store_format": f"v{store.segment_version}",
         "segments": len(store.segment_names),
         "num_docs": store.num_docs,
         "build_s": round(build_s, 2),
@@ -386,6 +454,21 @@ def main():
         help="dump Prometheus-text metrics to stderr every S seconds; also "
              "the workers' stats-snapshot cadence (enables telemetry)",
     )
+    ap.add_argument(
+        "--store-format", default=None, choices=["v1", "v2"],
+        help="segment format for a freshly built store: v1 raw arrays, "
+             "v2 block-compressed + bloom (byte-identical queries)",
+    )
+    ap.add_argument(
+        "--build-segments", type=int, default=1,
+        help="shard the corpus into N appended segments (gives --compact "
+             "something to merge)",
+    )
+    ap.add_argument(
+        "--compact", action="store_true",
+        help="merge segments in a background process while the workload "
+             "runs; serving picks the swap up live via refresh()",
+    )
     args = ap.parse_args()
     serve(
         args.docs,
@@ -406,6 +489,9 @@ def main():
         json_out=args.json,
         trace_out=args.trace_out,
         metrics_interval=args.metrics_interval,
+        store_format=args.store_format,
+        build_segments=args.build_segments,
+        compact=args.compact,
     )
 
 

@@ -1,18 +1,31 @@
 """Persistent, queryable co-occurrence store.
 
 Layers: ``builder`` (SpillSink: budgeted spill-and-merge from any PairSink
-producer) → ``csr_store`` (immutable mmap CSR segments) → ``segments``
-(LSM manifest: incremental append, shard ingest, compaction) → ``requests``
-(typed query requests, QueryPlanner routing/coalescing, one execution
-path) → ``query`` (batched pair/top-k/PMI engine, numpy or Pallas kernel)
-→ ``serving`` (multi-process shared-mmap workers with cross-client
-micro-batching, hot-term routing, and streaming top-k).
+producer) → ``codec``/``bloom`` (block-compressed columns, blocked bloom
+filters) → ``csr_store`` (immutable segments: v1 raw mmap or v2
+compressed, one ``open_segment`` dispatch) → ``segments`` (LSM manifest:
+incremental append, shard ingest, size-tiered foreground/background
+compaction) → ``requests`` (typed query requests, QueryPlanner
+routing/coalescing, one execution path) → ``query`` (batched
+pair/top-k/PMI engine, numpy or Pallas kernel) → ``serving``
+(multi-process shared-mmap workers with cross-client micro-batching,
+hot-term routing, and streaming top-k).
 See docs/architecture.md for the dataflow, docs/formats.md for the
 on-disk layout, and docs/serving.md for the query API + wire protocol.
 """
 
+from repro.store.bloom import BloomFilter
 from repro.store.builder import SpillSink, merge_row_streams
-from repro.store.csr_store import CSRSegment, segment_from_pair_file, write_segment
+from repro.store.codec import BlockCache, CompressedColumn, write_column
+from repro.store.csr_store import (
+    CompressedSegment,
+    CSRSegment,
+    compress_segment,
+    open_segment,
+    segment_bytes,
+    segment_from_pair_file,
+    write_segment,
+)
 from repro.store.query import QueryEngine
 from repro.store.requests import (
     NeighboursRequest,
@@ -22,17 +35,26 @@ from repro.store.requests import (
     TopKRequest,
     route_term,
 )
-from repro.store.segments import Store
+from repro.store.segments import CompactionHandle, Store
 from repro.store.serving import CoocClient, CoocServer, ServingConfig
 
 __all__ = [
     "SpillSink",
     "merge_row_streams",
+    "BloomFilter",
+    "BlockCache",
+    "CompressedColumn",
+    "write_column",
     "CSRSegment",
+    "CompressedSegment",
+    "compress_segment",
+    "open_segment",
+    "segment_bytes",
     "segment_from_pair_file",
     "write_segment",
     "QueryEngine",
     "Store",
+    "CompactionHandle",
     "TopKRequest",
     "PairCountsRequest",
     "NeighboursRequest",

@@ -496,10 +496,12 @@ class SpillSink:
         df: np.ndarray | None = None,
         num_docs: int = 0,
         source: str = "spill",
+        version: int | None = None,
     ):
         """Merge everything into a CSR segment at ``out_dir`` and clean up
-        the spill files. Returns the opened ``CSRSegment``."""
-        from repro.store.csr_store import CSRSegment, write_segment
+        the spill files. Returns the opened segment (``version`` picks the
+        on-disk format, see ``csr_store.write_segment``)."""
+        from repro.store.csr_store import open_segment, write_segment
 
         write_segment(
             out_dir,
@@ -508,9 +510,10 @@ class SpillSink:
             df=df,
             num_docs=num_docs,
             source=source,
+            version=version,
         )
         self.close()
-        return CSRSegment(out_dir)
+        return open_segment(out_dir)
 
     def close(self) -> None:
         """Delete spill files (and the spill dir if we created it)."""

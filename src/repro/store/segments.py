@@ -2,40 +2,76 @@
 
 A store directory holds ``store.json`` plus one subdirectory per segment:
 
-    store.json       {vocab_size, segments: [...], next_seg_id}
-    seg-00000/       immutable CSR segment (csr_store.py layout)
-    seg-00001/
+    store.json       {generation, vocab_size, segments: [...],
+                      next_seg_id, segment_version}
+    seg-00000/       immutable segment (csr_store.py layout, v1 raw or
+    seg-00001/        v2 block-compressed — formats coexist freely)
     ...
 
 Counts are additive across document batches (C = Σ_s B_sᵀ B_s), so the
 store supports **exact incremental appends**: counting a new document batch
 produces a new segment; queries sum counts across segments; ``compact()``
-k-way-merges all segments back into one with no loss of exactness. The same
+k-way-merges segments back together with no loss of exactness. The same
 merge path ingests per-shard outputs of the distributed runner, following
 the inverted-index-based real-time construction of Cheng (2023).
+
+Concurrency model: segments are immutable, so the manifest is the only
+mutable state. Every commit is a read-modify-write of ``store.json`` under
+an advisory ``flock`` (``.store.lock``), which lets a **background
+compaction process** merge small segments while the owning process keeps
+appending — neither clobbers the other's manifest entry. Readers never
+lock: ``refresh()`` detects foreign commits with one ``stat()`` plus a
+``generation`` counter cross-check (the counter, serialized first in
+store.json, catches the in-place same-size same-mtime rewrite a bare stat
+signature can miss), and mmaps opened before a compaction keep working
+after it because POSIX unlink only detaches the name.
+
+Size-tiered compaction: ``plan_compaction()`` picks the smallest run of
+similar-sized segments (read-amplification reducers first, never a
+rewrite of one big segment to absorb a tiny one), ``compact(names=...)``
+merges exactly those, and ``compact_background()`` runs that in a spawned
+worker process — the serving workers pick up the swap via their existing
+between-batch ``refresh()``.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import queue
+import re
 import shutil
 
 import numpy as np
 
+try:
+    import fcntl
+except ImportError:  # non-POSIX: single-process use keeps working unlocked
+    fcntl = None
+
 from repro.store.builder import SpillSink, merge_row_streams, sum_by_key
-from repro.store.csr_store import CSRSegment, write_segment
+from repro.store.csr_store import (
+    DEFAULT_SEGMENT_VERSION,
+    open_segment,
+    segment_bytes,
+    write_segment,
+)
+from repro.store.spawn import spawn_friendly_env
 
 STORE_META = "store.json"
+LOCK_NAME = ".store.lock"
+
+_GENERATION_RE = re.compile(rb'"generation":\s*(\d+)')
 
 
 class Store:
     """A directory of CSR segments behind a JSON manifest."""
 
-    def __init__(self, path: str, manifest: dict):
+    def __init__(self, path: str, manifest: dict, *, registry=None):
         self.path = path
         self.manifest = manifest
-        self._segments: dict[str, CSRSegment] = {}
+        self.registry = registry
+        self._segments: dict[str, object] = {}
         # bumped on every manifest mutation; query engines use it to know
         # when their row caches are stale
         self.version = 0
@@ -45,20 +81,38 @@ class Store:
 
     # ------------------------------------------------------- lifecycle
     @classmethod
-    def create(cls, path: str, vocab_size: int) -> "Store":
+    def create(
+        cls, path: str, vocab_size: int, *, segment_version: int | None = None,
+        registry=None,
+    ) -> "Store":
+        """Create an empty store. ``segment_version`` fixes the on-disk
+        format of every segment this store writes (1 = raw arrays,
+        2 = block-compressed; default 1) — recorded in the manifest, so
+        every later append and compaction agrees."""
         if os.path.exists(os.path.join(path, STORE_META)):
             raise FileExistsError(f"store already exists at {path}")
         os.makedirs(path, exist_ok=True)
         store = cls(
-            path, {"vocab_size": vocab_size, "segments": [], "next_seg_id": 0}
+            path,
+            {
+                "generation": 0,
+                "vocab_size": vocab_size,
+                "segments": [],
+                "next_seg_id": 0,
+                "segment_version": int(
+                    DEFAULT_SEGMENT_VERSION
+                    if segment_version is None else segment_version
+                ),
+            },
+            registry=registry,
         )
         store._save()
         return store
 
     @classmethod
-    def open(cls, path: str) -> "Store":
+    def open(cls, path: str, *, registry=None) -> "Store":
         with open(os.path.join(path, STORE_META)) as f:
-            return cls(path, json.load(f))
+            return cls(path, json.load(f), registry=registry)
 
     @staticmethod
     def exists(path: str) -> bool:
@@ -71,7 +125,22 @@ class Store:
             return None
         return (st.st_ino, st.st_mtime_ns, st.st_size)
 
+    def _probe_generation(self) -> int | None:
+        """The manifest's generation counter with one small read — it is
+        serialized as the first key, so the head of the file suffices."""
+        try:
+            with open(os.path.join(self.path, STORE_META), "rb") as f:
+                m = _GENERATION_RE.search(f.read(96))
+        except OSError:
+            return None
+        return int(m.group(1)) if m else None
+
     def _save(self) -> None:
+        # generation first: refresh()'s staleness probe reads only the head
+        gen = int(self.manifest.get("generation", 0)) + 1
+        m = {"generation": gen}
+        m.update((k, v) for k, v in self.manifest.items() if k != "generation")
+        self.manifest = m
         tmp = os.path.join(self.path, STORE_META + ".tmp")
         with open(tmp, "w") as f:
             json.dump(self.manifest, f, indent=2)
@@ -79,20 +148,54 @@ class Store:
         self._meta_sig = self._stat_sig()
         self.version += 1
 
+    def _commit(self, mutate) -> None:
+        """Read-modify-write the manifest under the store's advisory lock:
+        re-read the freshest manifest (a background compaction or a sibling
+        appender may have committed since we last looked), apply ``mutate``
+        to it, write. Segments being immutable, this is the only mutual
+        exclusion the store needs."""
+        lf = open(os.path.join(self.path, LOCK_NAME), "a")
+        try:
+            if fcntl is not None:
+                fcntl.flock(lf, fcntl.LOCK_EX)
+            try:
+                with open(os.path.join(self.path, STORE_META)) as f:
+                    on_disk = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                on_disk = None
+            if on_disk is not None and on_disk.get(
+                "generation", 0
+            ) != self.manifest.get("generation", 0):
+                # a foreign commit landed: adopt it (and drop lazily-opened
+                # segments it may have removed) before applying ours on top
+                self.manifest = on_disk
+                self._segments.clear()
+            mutate(self.manifest)
+            self._save()
+        finally:
+            lf.close()  # closing releases the flock
+
     def refresh(self) -> bool:
         """Pick up another process's manifest commit (append / ingest /
-        compact). Cheap when nothing changed — one ``stat()`` of store.json;
-        on change the manifest is re-read, lazily-opened segments are
-        dropped, and ``version`` bumps so engines invalidate their row
-        caches. Serving workers call this between micro-batches, which is
-        how a mutation in the parent process becomes visible to queries
-        in flight through the serving layer.
+        compact). Cheap when nothing changed — one ``stat()`` of store.json,
+        plus a head-of-file generation cross-check that catches the case a
+        stat signature cannot: an in-place rewrite that lands on the same
+        inode, size, and (coarse-clock) mtime. On change the manifest is
+        re-read, lazily-opened segments are dropped, and ``version`` bumps
+        so engines invalidate their row caches. Serving workers call this
+        between micro-batches, which is how a mutation in the parent
+        process becomes visible to queries in flight through the serving
+        layer.
 
         Returns True if the manifest changed.
         """
         sig = self._stat_sig()
-        if sig is None or sig == self._meta_sig:
+        if sig is None:
             return False
+        if sig == self._meta_sig:
+            gen = self._probe_generation()
+            if gen is None or gen == int(self.manifest.get("generation", 0)):
+                return False
         with open(os.path.join(self.path, STORE_META)) as f:
             self.manifest = json.load(f)
         self._meta_sig = sig
@@ -106,16 +209,37 @@ class Store:
         return self.manifest["vocab_size"]
 
     @property
+    def segment_version(self) -> int:
+        """On-disk format of segments this store writes (1 raw, 2
+        compressed). Manifests from before the field default to 1, so old
+        stores keep appending the format they already hold."""
+        return int(self.manifest.get("segment_version", DEFAULT_SEGMENT_VERSION))
+
+    @property
     def segment_names(self) -> list[str]:
         return list(self.manifest["segments"])
 
     @property
-    def segments(self) -> list[CSRSegment]:
-        return [self._segment(n) for n in self.manifest["segments"]]
+    def segments(self) -> list:
+        # a compaction in another process can delete a segment directory
+        # between our manifest read and the open (segments open eagerly, so
+        # once _segment returns, unlink cannot hurt it) — adopt the newer
+        # manifest and retry rather than surface the race to the query
+        for _ in range(8):
+            try:
+                return [self._segment(n) for n in self.manifest["segments"]]
+            except FileNotFoundError:
+                if not self.refresh():
+                    raise
+        raise RuntimeError(
+            f"segment set of {self.path} kept changing underneath the reader"
+        )
 
-    def _segment(self, name: str) -> CSRSegment:
+    def _segment(self, name: str):
         if name not in self._segments:
-            self._segments[name] = CSRSegment(os.path.join(self.path, name))
+            self._segments[name] = open_segment(
+                os.path.join(self.path, name), registry=self.registry
+            )
         return self._segments[name]
 
     @property
@@ -135,9 +259,19 @@ class Store:
         return out
 
     # --------------------------------------------------------- writing
-    def _new_segment_dir(self) -> tuple[str, str]:
-        name = f"seg-{self.manifest['next_seg_id']:05d}"
-        self.manifest["next_seg_id"] += 1
+    def _reserve_segment(self) -> tuple[str, str]:
+        """Allocate the next segment name with a committed ``next_seg_id``
+        bump, so a concurrent writer (background compaction vs. appending
+        parent) can never be handed the same directory. A crash after the
+        reservation leaves a gap in the id sequence, never a collision."""
+        holder: dict = {}
+
+        def mut(m):
+            holder["name"] = f"seg-{m['next_seg_id']:05d}"
+            m["next_seg_id"] += 1
+
+        self._commit(mut)
+        name = holder["name"]
         return name, os.path.join(self.path, name)
 
     def add_segment_from_sink(
@@ -147,16 +281,19 @@ class Store:
         df: np.ndarray | None = None,
         num_docs: int = 0,
         source: str = "spill",
-    ) -> CSRSegment:
+    ):
         """Finalize a SpillSink's runs into a new segment of this store."""
         if sink.vocab_size != self.vocab_size:
             raise ValueError(
                 f"sink vocab {sink.vocab_size} != store vocab {self.vocab_size}"
             )
-        name, seg_dir = self._new_segment_dir()
-        seg = sink.finalize_segment(seg_dir, df=df, num_docs=num_docs, source=source)
-        self.manifest["segments"].append(name)
-        self._save()
+        name, seg_dir = self._reserve_segment()
+        seg = sink.finalize_segment(
+            seg_dir, df=df, num_docs=num_docs, source=source,
+            version=self.segment_version,
+        )
+        self._commit(lambda m: m["segments"].append(name))
+        self._segments[name] = seg
         return seg
 
     def add_segment_from_rows(
@@ -166,16 +303,16 @@ class Store:
         df: np.ndarray | None = None,
         num_docs: int = 0,
         source: str = "rows",
-    ) -> CSRSegment:
+    ):
         """Write a merged (primary, secondaries, counts) row stream — strictly
         ascending primaries, unique pairs — as a new segment. The single
         segment-adding primitive behind counting, ingest, and compaction."""
-        name, seg_dir = self._new_segment_dir()
+        name, seg_dir = self._reserve_segment()
         write_segment(
-            seg_dir, rows, self.vocab_size, df=df, num_docs=num_docs, source=source
+            seg_dir, rows, self.vocab_size, df=df, num_docs=num_docs,
+            source=source, version=self.segment_version,
         )
-        self.manifest["segments"].append(name)
-        self._save()
+        self._commit(lambda m: m["segments"].append(name))
         return self._segment(name)
 
     def append_collection(
@@ -185,7 +322,7 @@ class Store:
         method: str = "list-scan",
         memory_budget_pairs: int = 4 << 20,
         **kwargs,
-    ) -> CSRSegment:
+    ):
         """Count a new document batch and append it as a segment (the exact
         incremental path: no existing segment is touched). ``method`` may be
         ``"auto"`` — the planner's cost models pick it."""
@@ -216,7 +353,7 @@ class Store:
                 sink, df=df, num_docs=c.num_docs, source=f"count:{method}"
             )
 
-    def ingest_store(self, other: "Store") -> CSRSegment:
+    def ingest_store(self, other: "Store"):
         """Merge another store's segments (e.g. a per-shard store from the
         distributed runner) into one new segment here. Exact: counts add."""
         if other.vocab_size != self.vocab_size:
@@ -228,17 +365,29 @@ class Store:
             source=f"ingest:{os.path.basename(other.path)}",
         )
 
-    def compact(self) -> CSRSegment:
-        """Merge all segments into one (LSM major compaction). Queries before
-        and after return identical counts. The manifest is committed exactly
-        once, *after* the merged segment is fully written — a crash mid-way
-        leaves only an orphan directory, never double-counted segments (so
-        this cannot go through ``add_segment_from_rows``, which appends)."""
-        old_names = self.segment_names
+    # ------------------------------------------------------ compaction
+    def compact(self, names: list[str] | None = None):
+        """Merge segments into one (LSM compaction). ``names=None`` merges
+        everything (major compaction); a list merges exactly those segments
+        and leaves the rest in place. Queries before and after return
+        identical counts. The manifest commit happens exactly once, *after*
+        the merged segment is fully written, and is a locked
+        read-modify-write — segments another process appended meanwhile
+        survive; a crash mid-way leaves only an orphan directory, never
+        double-counted segments."""
+        old_names = list(names) if names is not None else self.segment_names
+        if not old_names:
+            raise ValueError("nothing to compact")
+        current = set(self.manifest["segments"])
+        missing = [n for n in old_names if n not in current]
+        if missing:
+            raise ValueError(f"unknown segments {missing}")
         old_segs = [self._segment(n) for n in old_names]
-        df = self.df()
-        num_docs = self.num_docs
-        name, seg_dir = self._new_segment_dir()
+        df = np.zeros(self.vocab_size, dtype=np.int64)
+        for s in old_segs:
+            df += s.df
+        num_docs = sum(s.num_docs for s in old_segs)
+        name, seg_dir = self._reserve_segment()
         write_segment(
             seg_dir,
             merge_row_streams([s.iter_rows() for s in old_segs]),
@@ -246,13 +395,76 @@ class Store:
             df=df,
             num_docs=num_docs,
             source=f"compact:{len(old_names)}",
+            version=self.segment_version,
         )
-        self.manifest["segments"] = [name]
-        self._save()
+        dropped = set(old_names)
+
+        def mut(m):
+            m["segments"] = [
+                n for n in m["segments"] if n not in dropped
+            ] + [name]
+
+        self._commit(mut)
         for n in old_names:
             self._segments.pop(n, None)
+            # unlink only detaches the names: readers that opened the old
+            # segments before this commit keep valid mmaps until they close
             shutil.rmtree(os.path.join(self.path, n), ignore_errors=True)
         return self._segment(name)
+
+    def plan_compaction(
+        self, *, min_segments: int = 2, tier_ratio: float = 4.0,
+        max_segments: int | None = None,
+    ) -> list[str]:
+        """Size-tiered selection: walk segments smallest-first and return
+        the first run of at least ``min_segments`` whose sizes stay within
+        ``tier_ratio`` of the run's smallest member — the classic LSM
+        policy of merging peers, never rewriting a big segment to absorb a
+        tiny one. Returns [] when no tier qualifies."""
+        names = self.segment_names
+        if len(names) < min_segments:
+            return []
+        sized = sorted(
+            (segment_bytes(os.path.join(self.path, n)), n) for n in names
+        )
+        i = 0
+        while i < len(sized):
+            j = i
+            while j < len(sized) and sized[j][0] <= sized[i][0] * tier_ratio:
+                j += 1
+            if j - i >= min_segments:
+                tier = [n for _, n in sized[i:j]]
+                return tier[:max_segments] if max_segments else tier
+            i = j
+        return []
+
+    def compact_background(
+        self, names: list[str] | None = None, *,
+        min_segments: int = 2, tier_ratio: float = 4.0,
+    ) -> "CompactionHandle | None":
+        """Run a compaction in a spawned worker process and return
+        immediately. ``names=None`` compacts the tier ``plan_compaction``
+        picks (returns None when nothing qualifies). The worker opens its
+        own Store handle, merges, and commits under the manifest lock, so
+        this process may keep appending concurrently; call ``refresh()``
+        (serving workers already do, between micro-batches) to see the
+        swap. ``handle.join()`` waits and returns the result dict."""
+        if names is None:
+            names = self.plan_compaction(
+                min_segments=min_segments, tier_ratio=tier_ratio
+            )
+        names = list(names)
+        if not names:
+            return None
+        with spawn_friendly_env() as ctx:
+            result_q = ctx.Queue()
+            proc = ctx.Process(
+                target=_compact_worker,
+                args=(self.path, names, result_q),
+                daemon=True,
+            )
+            proc.start()
+        return CompactionHandle(proc, result_q, names)
 
     # --------------------------------------------------------- queries
     # (thin exact primitives; the batched/scored engine lives in query.py)
@@ -285,3 +497,54 @@ class Store:
         for s in self.segments:
             mat += s.dense()
         return mat
+
+
+class CompactionHandle:
+    """Handle on one background compaction process."""
+
+    def __init__(self, proc, result_q, names: list[str]):
+        self.proc = proc
+        self.names = names
+        self._q = result_q
+        self._result: tuple | None = None
+
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def join(self, timeout: float | None = None) -> dict:
+        """Wait for the compaction and return its result dict
+        (``{"segment", "nnz", "merged"}``). Raises on worker failure."""
+        self.proc.join(timeout)
+        if self.proc.is_alive():
+            raise TimeoutError("background compaction still running")
+        if self._result is None:
+            try:
+                self._result = self._q.get(timeout=5)
+            except queue.Empty:
+                self._result = (
+                    "error", "compaction worker died without a result"
+                )
+        status, payload = self._result
+        if status != "ok":
+            raise RuntimeError(f"background compaction failed: {payload}")
+        return payload
+
+
+def _compact_worker(store_path: str, names: list[str], result_q) -> None:
+    """Entry point of the spawned compaction process: open an own Store
+    handle and run the locked partial compaction."""
+    try:
+        store = Store.open(store_path)
+        seg = store.compact(names=names)
+        result_q.put(
+            (
+                "ok",
+                {
+                    "segment": os.path.basename(seg.path),
+                    "nnz": seg.nnz,
+                    "merged": list(names),
+                },
+            )
+        )
+    except Exception as e:  # report, don't vanish: join() re-raises
+        result_q.put(("error", f"{type(e).__name__}: {e}"))

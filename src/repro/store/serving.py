@@ -67,16 +67,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import multiprocessing as mp
-import os
 import queue
-import sys
 import threading
 import time
 
 import numpy as np
 
 from repro import obs
+from repro.store.spawn import spawn_friendly_env
 from repro.store.requests import (
     NeighboursRequest,
     PairCountsRequest,
@@ -202,9 +200,11 @@ def _worker_main(
     from repro.store.segments import Store
 
     reg = obs.Registry(enabled=True, max_events=10_000)
+    # the registry reaches the segments too: codec/bloom counters
+    # (blocks decoded, cache hits, bloom negatives) ride the same snapshots
     engine = QueryEngine(
-        Store.open(store_path), cache_rows=cfg.cache_rows, kernel=cfg.kernel,
-        registry=reg,
+        Store.open(store_path, registry=reg), cache_rows=cfg.cache_rows,
+        kernel=cfg.kernel, registry=reg,
     )
     stats = {k: 0 for k in _STAT_KEYS}
     h_wait = reg.histogram("serving/queue_wait_s")
@@ -565,40 +565,17 @@ class CoocServer:
     def start(self) -> "CoocServer":
         if self._started:
             raise RuntimeError("server already started")
-        ctx = mp.get_context("spawn")
-        # routed: one request queue per worker (the planner picks the queue);
-        # unrouted: one shared queue every worker drains (work stealing)
-        n_queues = self.config.workers if self.config.routing else 1
-        self._request_qs = [ctx.Queue() for _ in range(n_queues)]
-        self._response_q = ctx.Queue()
-        self._stats_q = ctx.Queue()
-        # spawned children re-import repro.store.serving: make sure the
-        # package root is importable even when the parent relied on sys.path
-        # (e.g. a conftest) rather than PYTHONPATH
-        import repro
-
-        src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
-        old_pp = os.environ.get("PYTHONPATH")
-        parts = (old_pp.split(os.pathsep) if old_pp else [])
-        if src_root not in parts:
-            os.environ["PYTHONPATH"] = os.pathsep.join([src_root] + parts)
-        # spawn re-RUNS the parent's __main__ in every child when the parent
-        # is a plain script (no module spec): an unguarded script would
-        # re-execute top-level code per worker (and trip the bootstrap
-        # guard), and an interactive/stdin parent has a phantom "<stdin>"
-        # path the child cannot open. Workers import everything from repro
-        # and need nothing from __main__, so hide the path for the duration
-        # of the spawns and skip the fix-up entirely.
-        main_mod = sys.modules.get("__main__")
-        hide_main = (
-            main_mod is not None
-            and getattr(main_mod, "__spec__", None) is None
-            and getattr(main_mod, "__file__", None) is not None
-        )
-        saved_main_file = main_mod.__file__ if hide_main else None
-        if hide_main:
-            del main_mod.__file__
-        try:
+        # spawned children re-import repro.store.serving: spawn_friendly_env
+        # makes the package root importable and hides a script-style
+        # __main__ for the duration of the spawns (see store/spawn.py)
+        with spawn_friendly_env() as ctx:
+            # routed: one request queue per worker (the planner picks the
+            # queue); unrouted: one shared queue every worker drains
+            # (work stealing)
+            n_queues = self.config.workers if self.config.routing else 1
+            self._request_qs = [ctx.Queue() for _ in range(n_queues)]
+            self._response_q = ctx.Queue()
+            self._stats_q = ctx.Queue()
             for i in range(self.config.workers):
                 p = ctx.Process(
                     target=_worker_main,
@@ -614,13 +591,6 @@ class CoocServer:
                 )
                 p.start()
                 self._procs.append(p)
-        finally:
-            if old_pp is None:
-                os.environ.pop("PYTHONPATH", None)
-            else:
-                os.environ["PYTHONPATH"] = old_pp
-            if hide_main:
-                main_mod.__file__ = saved_main_file
         self._router = threading.Thread(target=self._route, daemon=True)
         self._router.start()
         self._started = True
@@ -672,6 +642,8 @@ class CoocServer:
         Keys of note: ``server_timing`` (queue-wait / execute /
         request-latency p50/p95/p99 in ms, from the merged histograms),
         ``workers_lost`` (workers that never sent a final snapshot),
+        ``storage`` (codec traffic on v2 compressed stores: blocks decoded,
+        block-cache hit rate, bloom negative rate — zeros on raw v1),
         ``metrics`` (the raw merged snapshot — feed it to
         ``repro.obs.prometheus_text``), ``per_worker`` (each worker's own
         counters, e.g. per-worker ``cache_hit_rate`` under routing)."""
@@ -718,6 +690,21 @@ class CoocServer:
                     "mean": round(h.mean * 1e3, 3),
                     "count": h.count,
                 }
+        # storage-engine counters (v2 compressed segments; zeros on raw v1
+        # stores): codec traffic plus derived block-cache / bloom hit rates
+        ctr = metrics.get("counters", {})
+        decoded = ctr.get("storage.blocks_decoded", 0)
+        c_hits = ctr.get("storage.block_cache_hits", 0)
+        c_miss = ctr.get("storage.block_cache_misses", 0)
+        b_checks = ctr.get("storage.bloom_checks", 0)
+        b_neg = ctr.get("storage.bloom_negative", 0)
+        storage = {
+            "blocks_decoded": decoded,
+            "block_cache_hit_rate": round(c_hits / max(c_hits + c_miss, 1), 4),
+            "bloom_checks": b_checks,
+            "bloom_negative": b_neg,
+            "bloom_negative_rate": round(b_neg / max(b_checks, 1), 4),
+        }
         return {
             "workers": self.config.workers,
             "kernel": self.config.kernel,
@@ -727,6 +714,7 @@ class CoocServer:
             **agg,
             "workers_lost": workers_lost,
             "server_timing": timing,
+            "storage": storage,
             "metrics": metrics,
             "per_worker": [per_worker[w] for w in sorted(per_worker)],
         }

@@ -1,0 +1,351 @@
+"""Compressed columnar storage engine (ISSUE 7): block codecs, compressed
+columns, bloom filters, and the v2 segment format — gated on *byte identity*
+with the raw v1 arrays and the brute-force oracle, never on allclose."""
+
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core.cooc import count
+from repro.core.oracle import brute_force_counts
+from repro.data.corpus import synthetic_zipf_collection
+from repro.data.preprocess import shard_documents
+from repro.store import (
+    BloomFilter,
+    CompressedColumn,
+    CompressedSegment,
+    CSRSegment,
+    QueryEngine,
+    SpillSink,
+    Store,
+    compress_segment,
+    open_segment,
+    segment_bytes,
+    write_column,
+)
+from repro.store import codec
+
+
+@pytest.fixture(scope="module")
+def coll():
+    return synthetic_zipf_collection(120, vocab=200, mean_len=15, seed=11)
+
+
+@pytest.fixture(scope="module")
+def oracle(coll):
+    return brute_force_counts(coll)
+
+
+def _build_segment(coll, out_dir: str, *, version: int):
+    sink = SpillSink(coll.vocab_size, memory_budget_pairs=256)
+    count("list-scan", coll, sink)
+    return sink.finalize_segment(out_dir, version=version)
+
+
+@pytest.fixture(scope="module")
+def seg_pair(coll, tmp_path_factory):
+    """The same pairs as a v1 (raw) and a v2 (compressed) segment."""
+    base = tmp_path_factory.mktemp("segs")
+    v1 = _build_segment(coll, str(base / "v1"), version=1)
+    v2 = _build_segment(coll, str(base / "v2"), version=2)
+    assert isinstance(v1, CSRSegment) and isinstance(v2, CompressedSegment)
+    return v1, v2
+
+
+# ----------------------------------------------------------------- codecs
+_EXTREMES = np.array(
+    [0, 1, -1, 127, 128, -128, 2**31 - 1, -(2**31),
+     2**63 - 1, -(2**63), 42],
+    dtype=np.int64,
+)
+
+
+def test_zigzag_roundtrip_extremes():
+    u = codec.zigzag_encode(_EXTREMES)
+    assert u.dtype == np.uint64
+    np.testing.assert_array_equal(codec.zigzag_decode(u), _EXTREMES)
+    # small magnitudes map to small codes (the property varint relies on)
+    assert codec.zigzag_encode(np.array([0, -1, 1, -2], dtype=np.int64)).tolist() \
+        == [0, 1, 2, 3]
+
+
+def test_varint_roundtrip_extremes():
+    u = codec.zigzag_encode(_EXTREMES)
+    b = codec.varint_encode(u)
+    assert b.dtype == np.uint8
+    np.testing.assert_array_equal(codec.varint_decode(b), u)
+    # empty input round-trips too
+    empty = np.zeros(0, dtype=np.uint64)
+    assert codec.varint_decode(codec.varint_encode(empty)).size == 0
+
+
+@pytest.mark.parametrize("n", [1, 63, 64, 65, 1000])
+def test_varint_roundtrip_random(n):
+    rng = np.random.default_rng(n)
+    # log-uniform widths so every byte length 1..10 is exercised
+    u = (rng.integers(0, 2**63, size=n).astype(np.uint64)
+         >> rng.integers(0, 63, size=n).astype(np.uint64))
+    np.testing.assert_array_equal(
+        codec.varint_decode(codec.varint_encode(u)), u
+    )
+
+
+@pytest.mark.parametrize("vals", [
+    np.zeros(100, dtype=np.uint64),                      # width 0
+    np.full(7, 2**64 - 1, dtype=np.uint64),              # width 64
+    np.arange(1000, dtype=np.uint64),
+    np.array([5], dtype=np.uint64),
+])
+def test_bitpack_roundtrip(vals):
+    b = codec.bitpack_encode(vals)
+    np.testing.assert_array_equal(codec.bitpack_decode(b, len(vals)), vals)
+
+
+def test_bitpack_is_frame_of_reference():
+    # a tight cluster far from zero packs to ~0 bits per value
+    vals = np.arange(10**12, 10**12 + 1024, dtype=np.uint64)
+    assert len(codec.bitpack_encode(vals)) < 9 + 1024 * 2
+
+
+# ------------------------------------------------------ compressed columns
+@pytest.mark.parametrize("mode,cdc", [
+    ("raw", "varint"), ("delta", "varint"), ("delta", "bitpack"),
+])
+@pytest.mark.parametrize("n", [0, 1, 1023, 1024, 1025, 5000])
+def test_column_roundtrip_and_slices(tmp_path, mode, cdc, n):
+    rng = np.random.default_rng(n + len(mode))
+    if mode == "delta":  # delta columns are for sorted data
+        values = np.sort(rng.integers(0, 10**9, size=n))
+    else:
+        values = rng.integers(0, 10**6, size=n)
+    path = str(tmp_path / f"{mode}_{cdc}_{n}.z")
+    write_column(path, values, mode=mode, codec=cdc, block=64)
+    col = CompressedColumn(path)
+    assert len(col) == n
+    np.testing.assert_array_equal(col.decode_all(), values)
+    for lo, hi in [(0, n), (0, 0), (n, n), (0, min(1, n)),
+                   (min(63, n), min(65, n)), (n // 2, n)]:
+        np.testing.assert_array_equal(col.slice(lo, hi), values[lo:hi])
+    if n:
+        assert col.at(0) == values[0] and col.at(n - 1) == values[n - 1]
+
+
+def test_column_find(tmp_path):
+    values = np.arange(0, 4000, 3, dtype=np.int64)  # sorted, stride 3
+    path = str(tmp_path / "find.z")
+    write_column(path, values, mode="delta", codec="bitpack", block=64)
+    col = CompressedColumn(path)
+    rng = np.random.default_rng(3)
+    for i in rng.integers(0, len(values), size=50):
+        assert col.find(int(values[i])) == i
+    for miss in (-1, 1, 4, values[-1] + 1, 10**9):
+        assert col.find(miss) == -1
+
+
+def test_column_dtype_preserved(tmp_path):
+    values = np.arange(100, dtype=np.int32)
+    path = str(tmp_path / "i32.z")
+    write_column(path, values, mode="delta", codec="varint", block=16)
+    col = CompressedColumn(path)
+    assert col.decode_all().dtype == np.int32
+    assert col.slice(10, 20).dtype == np.int32
+
+
+def test_block_cache_counts_hits(tmp_path):
+    from repro import obs
+
+    values = np.arange(1000, dtype=np.int64)
+    path = str(tmp_path / "cached.z")
+    write_column(path, values, block=64)
+    reg = obs.Registry(enabled=True)
+    cache = codec.BlockCache(max_blocks=4, registry=reg)
+    col = CompressedColumn(path, cache=cache, tag="t", registry=reg)
+    col.slice(0, 64)
+    col.slice(0, 64)                       # same block again -> cache hit
+    snap = reg.snapshot()["counters"]
+    assert snap["storage.block_cache_hits"] >= 1
+    assert snap["storage.blocks_decoded"] >= 1
+
+
+# ------------------------------------------------------------------ bloom
+def test_bloom_no_false_negatives_and_fpr():
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 2**62, size=20_000).astype(np.uint64)
+    filt = BloomFilter.build(keys)
+    assert filt.contains(keys).all()       # zero false negatives, always
+    probes = rng.integers(2**62, 2**63, size=50_000).astype(np.uint64)
+    fpr = filt.contains(probes).mean()
+    assert fpr < 0.05, f"blocked bloom FPR {fpr:.4f} out of spec"
+
+
+def test_bloom_save_load_roundtrip(tmp_path):
+    keys = np.arange(1000, dtype=np.uint64) * 2654435761
+    filt = BloomFilter.build(keys)
+    path = str(tmp_path / "bloom.bin")
+    filt.save(path)
+    loaded = BloomFilter.load(path)
+    assert loaded.contains(keys).all()
+    probes = np.arange(10_000, dtype=np.uint64) * 7 + 3
+    np.testing.assert_array_equal(loaded.contains(probes), filt.contains(probes))
+
+
+# ------------------------------------------------- v2 segment: identity
+def test_v2_matches_v1_and_oracle(coll, oracle, seg_pair):
+    v1, v2 = seg_pair
+    np.testing.assert_array_equal(v2.dense(), oracle)
+    np.testing.assert_array_equal(v2.df, v1.df)
+    assert v2.nnz == v1.nnz and v2.total_count == v1.total_count
+    sym = oracle + oracle.T
+    for t in range(coll.vocab_size):
+        for a, b in zip(v1.row(t), v2.row(t)):
+            assert a.tobytes() == b.tobytes() and a.dtype == b.dtype
+        for a, b in zip(v1.neighbours(t), v2.neighbours(t)):
+            assert a.tobytes() == b.tobytes() and a.dtype == b.dtype
+        ids, cnts = v2.neighbours(t)
+        np.testing.assert_array_equal(cnts, sym[t][sym[t] > 0])
+
+
+def test_v2_pair_counts_bloom_gated(coll, oracle, seg_pair):
+    from repro import obs
+
+    _, v2 = seg_pair
+    sym = oracle + oracle.T
+    rng = np.random.default_rng(13)
+    pairs = rng.integers(0, coll.vocab_size, size=(500, 2))
+    with obs.scoped() as reg:
+        got = v2.pair_counts(pairs)
+    np.testing.assert_array_equal(got, sym[pairs[:, 0], pairs[:, 1]])
+    for i, j in [(0, 0), (1, 2), (199, 3)]:
+        assert v2.pair_count(i, j) == sym[i, j]
+    snap = reg.snapshot()["counters"]
+    # a handful of pairs (diagonal / duplicates) resolve before the probe
+    assert snap["storage.bloom_checks"] >= 450
+    assert snap["storage.bloom_negative"] > 0   # most random pairs are absent
+
+
+def test_v2_iter_rows_and_pair_file(tmp_path, seg_pair):
+    v1, v2 = seg_pair
+    for (t1, s1, c1), (t2, s2, c2) in zip(v1.iter_rows(), v2.iter_rows()):
+        assert t1 == t2
+        assert s1.tobytes() == s2.tobytes()
+        assert c1.tobytes() == c2.tobytes()
+    p1, p2 = str(tmp_path / "a.pairs"), str(tmp_path / "b.pairs")
+    v1.to_pair_file(p1)
+    v2.to_pair_file(p2)
+    with open(p1, "rb") as f1, open(p2, "rb") as f2:
+        assert f1.read() == f2.read()
+
+
+def test_v2_compresses_at_least_2x(seg_pair):
+    v1, v2 = seg_pair
+    assert segment_bytes(v2.path) * 2 <= segment_bytes(v1.path)
+
+
+def test_compress_segment_in_place_upgrade(coll, oracle, tmp_path):
+    src = _build_segment(coll, str(tmp_path / "v1"), version=1)
+    dup = str(tmp_path / "dup")
+    shutil.copytree(src.path, dup)
+    compress_segment(dup)
+    seg = open_segment(dup)
+    assert isinstance(seg, CompressedSegment)
+    np.testing.assert_array_equal(seg.dense(), oracle)
+    assert not any(f.endswith(".bin") for f in os.listdir(dup)
+                   if f != "bloom.bin"), "raw arrays not removed"
+    with pytest.raises(ValueError, match="needs a v1 segment"):
+        compress_segment(dup)               # already v2
+
+
+# ------------------------------------------------ version/magic handling
+def test_open_segment_unknown_version_is_clear(coll, tmp_path):
+    seg = _build_segment(coll, str(tmp_path / "seg"), version=1)
+    meta_path = os.path.join(seg.path, "meta.json")
+    meta = json.load(open(meta_path))
+    meta["format_version"] = 99
+    json.dump(meta, open(meta_path, "w"))
+    with pytest.raises(ValueError, match="format_version 99"):
+        open_segment(seg.path)
+    meta["format_version"] = 1
+    meta["magic"] = "not-a-segment"
+    json.dump(meta, open(meta_path, "w"))
+    with pytest.raises(ValueError, match="magic"):
+        open_segment(seg.path)
+
+
+def test_open_segment_premagic_v1_still_loads(coll, oracle, tmp_path):
+    # segments written before the header existed carry no magic field
+    seg = _build_segment(coll, str(tmp_path / "seg"), version=1)
+    meta_path = os.path.join(seg.path, "meta.json")
+    meta = json.load(open(meta_path))
+    del meta["magic"]
+    json.dump(meta, open(meta_path, "w"))
+    loaded = open_segment(seg.path)
+    assert isinstance(loaded, CSRSegment)
+    np.testing.assert_array_equal(loaded.dense(), oracle)
+
+
+def test_write_segment_rejects_unknown_version(coll, tmp_path):
+    with pytest.raises(ValueError, match="unknown segment version"):
+        _build_segment(coll, str(tmp_path / "seg"), version=3)
+
+
+# -------------------------------------------------------- store integration
+def test_store_v2_end_to_end(coll, oracle, tmp_path):
+    store = Store.create(str(tmp_path / "s"), coll.vocab_size,
+                         segment_version=2)
+    for shard in shard_documents(coll, 2):
+        store.append_collection(shard, method="list-scan")
+    assert all(isinstance(s, CompressedSegment) for s in store.segments)
+    np.testing.assert_array_equal(store.dense(), oracle)
+    eng = QueryEngine(store)
+    rng = np.random.default_rng(5)
+    pairs = rng.integers(0, coll.vocab_size, size=(200, 2))
+    sym = oracle + oracle.T
+    np.testing.assert_array_equal(eng.pair_counts(pairs),
+                                  sym[pairs[:, 0], pairs[:, 1]])
+    # compaction keeps the format and the answers
+    store.compact()
+    assert len(store.segment_names) == 1
+    assert isinstance(store.segments[0], CompressedSegment)
+    np.testing.assert_array_equal(store.dense(), oracle)
+
+
+def test_store_mixed_v1_v2_segments(coll, oracle, tmp_path):
+    """v1 and v2 segments coexist in one store: the manifest's
+    segment_version only steers new writes, reads dispatch per segment."""
+    store = Store.create(str(tmp_path / "s"), coll.vocab_size,
+                         segment_version=1)
+    shards = shard_documents(coll, 2)
+    store.append_collection(shards[0], method="list-scan")
+    store._commit(lambda m: m.update(segment_version=2))
+    store.append_collection(shards[1], method="list-scan")
+    kinds = {type(s) for s in store.segments}
+    assert kinds == {CSRSegment, CompressedSegment}
+    np.testing.assert_array_equal(store.dense(), oracle)
+    # compacting the mixed pair merges into the current (v2) format
+    store.compact()
+    assert isinstance(store.segments[0], CompressedSegment)
+    np.testing.assert_array_equal(store.dense(), oracle)
+
+
+def test_v1_engine_results_identical_to_v2(coll, oracle, tmp_path):
+    """The ISSUE acceptance gate at store level: every query path returns
+    byte-identical results on a v1 and a v2 build of the same corpus."""
+    engines = []
+    for ver in (1, 2):
+        st = Store.create(str(tmp_path / f"v{ver}"), coll.vocab_size,
+                          segment_version=ver)
+        for shard in shard_documents(coll, 3):
+            st.append_collection(shard, method="list-scan")
+        engines.append(QueryEngine(st))
+    e1, e2 = engines
+    rng = np.random.default_rng(17)
+    terms = rng.integers(0, coll.vocab_size, size=64)
+    for score in ("count", "pmi", "dice"):
+        a, b = e1.topk(terms, k=8, score=score), e2.topk(terms, k=8, score=score)
+        assert a[0].tobytes() == b[0].tobytes()
+        assert a[1].tobytes() == b[1].tobytes()
+    pairs = rng.integers(0, coll.vocab_size, size=(300, 2))
+    assert e1.pair_counts(pairs).tobytes() == e2.pair_counts(pairs).tobytes()

@@ -448,3 +448,43 @@ def test_server_rejects_bad_args(store_path, tmp_path):
         CoocServer(str(tmp_path / "nope"))
     with pytest.raises(ValueError, match="unknown kernel"):
         CoocServer(store_path, kernel="cuda")
+
+
+# ------------------------------------------- compaction under live serving
+def test_server_serves_through_background_compaction(coll, tmp_path):
+    """Satellite (ISSUE 7): workers keep answering, byte-identically, while
+    a background process compacts the v2 segments out from under their
+    mmaps, and pick the merged segment up via their between-batch refresh.
+    The server stats surface the codec counters the workers accumulated."""
+    from repro.data.preprocess import shard_documents
+
+    path = str(tmp_path / "store")
+    store = Store.create(path, coll.vocab_size, segment_version=2)
+    for shard in shard_documents(coll, 3):
+        store.append_collection(shard, method="list-scan")
+
+    server = CoocServer(path, workers=2, batch_window_ms=1.0).start()
+    try:
+        client = server.client()
+        rng = np.random.default_rng(29)
+        terms = rng.integers(0, coll.vocab_size, size=24)
+        before = client.topk(terms, k=6, score="pmi")
+        handle = store.compact_background(names=store.segment_names)
+        assert handle is not None
+        while handle.alive():                     # serve through the merge
+            client.topk(rng.integers(0, coll.vocab_size, size=24), k=6)
+        res = handle.join(timeout=120)
+        assert len(res["merged"]) == 3
+        after = client.topk(terms, k=6, score="pmi")
+        assert before[0].tobytes() == after[0].tobytes()
+        assert before[1].tobytes() == after[1].tobytes()
+        pairs = rng.integers(0, coll.vocab_size, size=(64, 2))
+        want = QueryEngine(Store.open(path)).pair_counts(pairs)
+        np.testing.assert_array_equal(client.pair_counts(pairs), want)
+    finally:
+        stats = server.stop()
+    assert stats["workers_lost"] == 0
+    assert stats["storage"]["blocks_decoded"] > 0
+    assert 0.0 <= stats["storage"]["block_cache_hit_rate"] <= 1.0
+    store.refresh()
+    assert len(store.segment_names) == 1

@@ -469,3 +469,111 @@ def test_symmetric_build_identical_on_random_segments(tmp_path):
         got = _read_sym(seg_dir)
         for g, w in zip(got, want):
             assert np.array_equal(g, w), idx
+
+
+# ------------------------------------------- manifest generation / compaction
+def test_refresh_detects_same_stat_rewrite(coll, tmp_path):
+    """Satellite regression (ISSUE 7): a manifest rewrite that lands on the
+    same inode, byte length, and (coarse) mtime is invisible to a pure stat
+    signature — the generation counter at the head of the file must catch
+    it. Forced here by rewriting store.json in place, padded to the same
+    length, with the old mtime restored."""
+    path = str(tmp_path / "s")
+    store, _ = count_to_store("list-scan", coll, path)
+    sibling = Store.open(path)
+    meta_path = os.path.join(path, "store.json")
+    st_before = os.stat(meta_path)
+    import json as _json
+
+    with open(meta_path) as f:
+        manifest = _json.load(f)
+    old_len = st_before.st_size
+    manifest["generation"] = int(manifest["generation"]) + 1
+    manifest["segments"] = []            # semantically different manifest
+    blob = _json.dumps(manifest, indent=2)
+    blob += " " * (old_len - len(blob))  # same byte length
+    assert len(blob) == old_len
+    with open(meta_path, "r+") as f:     # in place: same inode
+        f.write(blob)
+    os.utime(meta_path, ns=(st_before.st_atime_ns, st_before.st_mtime_ns))
+    st_after = os.stat(meta_path)
+    assert (st_after.st_ino, st_after.st_mtime_ns, st_after.st_size) == (
+        st_before.st_ino, st_before.st_mtime_ns, st_before.st_size
+    ), "rewrite failed to preserve the stat signature"
+    assert sibling.refresh() is True, "generation probe missed the rewrite"
+    assert sibling.segment_names == []
+
+
+def test_generation_monotone_across_commits(coll, tmp_path):
+    path = str(tmp_path / "s")
+    store, _ = count_to_store("list-scan", coll, path)
+    g0 = store.manifest["generation"]
+    store.append_collection(coll, method="list-scan")
+    g1 = store.manifest["generation"]
+    store.compact()
+    g2 = store.manifest["generation"]
+    assert g0 < g1 < g2
+
+
+def test_plan_compaction_size_tiers(coll, tmp_path):
+    """Size-tiered planning merges peers: three similar small segments
+    qualify, the one big segment is left alone."""
+    from repro.data.preprocess import shard_documents
+
+    path = str(tmp_path / "s")
+    store = Store.create(path, coll.vocab_size)
+    store.append_collection(coll, method="list-scan")   # big
+    for shard in shard_documents(coll, 6)[:3]:          # three small peers
+        store.append_collection(shard, method="list-scan")
+    plan = store.plan_compaction(min_segments=2, tier_ratio=4.0)
+    assert len(plan) == 3
+    assert store.segment_names[0] not in plan           # big one excluded
+    assert store.plan_compaction(min_segments=5) == []
+
+
+def test_compact_background_joins_and_preserves_appends(coll, oracle, tmp_path):
+    """compact_background merges in a worker process while this process
+    keeps appending; the concurrent append survives the commit race."""
+    from repro.data.preprocess import shard_documents
+
+    path = str(tmp_path / "s")
+    store = Store.create(path, coll.vocab_size)
+    shards = shard_documents(coll, 3)
+    for shard in shards[:2]:
+        store.append_collection(shard, method="list-scan")
+    names = list(store.segment_names)
+    handle = store.compact_background(names=names)
+    assert handle is not None
+    store.append_collection(shards[2], method="list-scan")  # concurrent write
+    res = handle.join(timeout=120)
+    assert sorted(res["merged"]) == sorted(names)
+    store.refresh()
+    assert len(store.segment_names) == 2    # merged + concurrent append
+    np.testing.assert_array_equal(store.dense(), oracle)
+
+
+def test_compact_while_reader_holds_segments(coll, oracle, tmp_path):
+    """Satellite (ISSUE 7): a reader holding opened segments survives the
+    compactor unlinking them — eager mmaps keep the data alive — and a
+    refresh mid-stream swaps to the merged segment with identical bytes."""
+    from repro.data.preprocess import shard_documents
+
+    path = str(tmp_path / "s")
+    store = Store.create(path, coll.vocab_size, segment_version=2)
+    for shard in shard_documents(coll, 3):
+        store.append_collection(shard, method="list-scan")
+    reader = Store.open(path)
+    eng = QueryEngine(reader)
+    rng = np.random.default_rng(23)
+    terms = rng.integers(0, coll.vocab_size, size=32)
+    before = eng.topk(terms, k=8, score="pmi")
+    _ = reader.segments                      # opened (mmapped) pre-compact
+    store.compact()                          # unlinks the three source dirs
+    after_unlinked = eng.topk(terms, k=8, score="pmi")   # old mmaps still live
+    assert before[0].tobytes() == after_unlinked[0].tobytes()
+    assert before[1].tobytes() == after_unlinked[1].tobytes()
+    assert reader.refresh() is True
+    after = eng.topk(terms, k=8, score="pmi")
+    assert before[0].tobytes() == after[0].tobytes()
+    assert before[1].tobytes() == after[1].tobytes()
+    np.testing.assert_array_equal(reader.dense(), oracle)
