@@ -511,95 +511,38 @@ class PlanExecutor:
                     sink.emit_row(primary, secs, cnts)
             result.pairs_path = job.out_path
         elif job.output == "store":
-            self._write_store(plan, _dense_rows(upper), result)
+            _write_store(plan, _dense_rows(upper), result)
 
     def _finalize_spill(
         self, plan: Plan, spill_root: str, result: ExecutionResult
     ) -> None:
-        from repro.store.builder import merge_bucket_runs
+        from repro.store.builder import (
+            _iter_run,
+            discover_bucket_runs,
+            merge_bucket_runs,
+            merge_row_streams,
+        )
 
         job = plan.job
-        runs = sorted(glob.glob(os.path.join(spill_root, "shard_*", "run_*.bin")))
         # bucket runs (run_<spill>_b<bucket>.bin) cover disjoint ascending
         # primary ranges: merge bucket by bucket — in memory when the bucket
         # fits the merge cap, via a heap spanning only that bucket's runs
         # across shards otherwise — never a global k-way over every run file
-        by_bucket: dict[int, list[str]] = {}
-        legacy = False
-        for p in runs:
-            name = os.path.basename(p)
-            if "_b" not in name:
-                legacy = True  # pre-bucketing run file (resumed old spill dir)
-                break
-            b = int(name.rsplit("_b", 1)[1].split(".")[0])
-            by_bucket.setdefault(b, []).append(p)
+        by_bucket, legacy = discover_bucket_runs(spill_root)
         if legacy:
             # unbucketed runs span the whole primary range: only a global
             # k-way merge is order-correct for them
-            from repro.store.builder import _iter_run, merge_row_streams
-
-            merged = merge_row_streams([_iter_run(p) for p in runs])
+            merged = merge_row_streams([_iter_run(p) for p in by_bucket[-1]])
         else:
             merged = merge_bucket_runs(
                 by_bucket, plan.job.collection.vocab_size,
                 cap_pairs=4 * job.memory_budget_pairs,
             )
-
-        tally = {"distinct_pairs": 0, "total_count": 0}
-
-        def tallied(rows):
-            for primary, secs, cnts in rows:
-                tally["distinct_pairs"] += len(secs)
-                tally["total_count"] += int(cnts.sum())
-                yield primary, secs, cnts
-
-        if job.output == "pairs-file":
-            with obs.get_registry().span("ingest/pairs_write"), FileSink(
-                job.out_path
-            ) as sink:
-                for primary, secs, cnts in tallied(merged):
-                    sink.emit_row(primary, secs, cnts)
-            result.pairs_path = job.out_path
-        elif job.output == "store":
-            self._write_store(plan, tallied(merged), result)
-        else:  # exact stats via the same merge, no materialization
-            for _ in tallied(merged):
-                pass
-        result.summary["distinct_pairs"] = tally["distinct_pairs"]
-        result.summary["total_count"] = tally["total_count"]
+        _emit_merged_rows(plan, merged, result)
         # run files are deliberately kept in user-provided out_dirs: together
         # with the tracker checkpoint they make the run resumable even across
         # a crash during (or after) this merge; temp workdirs are removed
         # wholesale by execute().
-
-    def _write_store(self, plan: Plan, rows, result: ExecutionResult) -> None:
-        from repro.store import Store
-
-        job = plan.job
-        c = job.collection
-        if Store.exists(job.out_path):
-            store = Store.open(job.out_path)
-            if store.vocab_size != c.vocab_size:
-                raise ValueError(
-                    f"store vocab {store.vocab_size} != collection vocab "
-                    f"{c.vocab_size}"
-                )
-        else:
-            store = Store.create(job.out_path, c.vocab_size)
-        # a second handle opened before the commit: the refresh span below
-        # measures visibility — the time until an independent (serving-side)
-        # reader observes the new segment, exactly what ingest_bench gates
-        reader = Store.open(job.out_path)
-        df = np.bincount(c.terms, minlength=c.vocab_size).astype(np.int64)
-        seg = store.add_segment_from_rows(
-            rows, df=df, num_docs=c.num_docs, source=f"plan:{plan.method}"
-        )
-        with obs.get_registry().span("ingest/refresh") as sp:
-            sp.set(visible=reader.refresh())
-        result.store = store
-        result.segment = seg
-        result.summary.setdefault("distinct_pairs", int(seg.nnz))
-        result.summary["segment"] = os.path.basename(seg.path)
 
 
 def _dense_rows(upper: np.ndarray):
@@ -608,6 +551,600 @@ def _dense_rows(upper: np.ndarray):
         nz = np.nonzero(upper[i])[0]
         if len(nz):
             yield i, nz, upper[i][nz]
+
+
+def _emit_merged_rows(
+    plan: Plan, merged, result: ExecutionResult,
+    *, single_commit: bool = False,
+) -> None:
+    """Drive the fully merged row stream into the job's output target,
+    tallying exact distinct-pair/total counts on the way through (shared by
+    the serial and parallel finalize paths — their byte-identity contract
+    ends here, at the same writer over the same rows)."""
+    job = plan.job
+    tally = {"distinct_pairs": 0, "total_count": 0}
+
+    def tallied(rows):
+        for primary, secs, cnts in rows:
+            tally["distinct_pairs"] += len(secs)
+            tally["total_count"] += int(cnts.sum())
+            yield primary, secs, cnts
+
+    if job.output == "pairs-file":
+        with obs.get_registry().span("ingest/pairs_write"), FileSink(
+            job.out_path
+        ) as sink:
+            for primary, secs, cnts in tallied(merged):
+                sink.emit_row(primary, secs, cnts)
+        result.pairs_path = job.out_path
+    elif job.output == "store":
+        _write_store(
+            plan, tallied(merged), result, single_commit=single_commit
+        )
+    else:  # exact stats via the same merge, no materialization
+        for _ in tallied(merged):
+            pass
+    result.summary["distinct_pairs"] = tally["distinct_pairs"]
+    result.summary["total_count"] = tally["total_count"]
+
+
+def _write_store(
+    plan: Plan, rows, result: ExecutionResult,
+    *, single_commit: bool = False,
+) -> None:
+    from repro.store import Store
+
+    job = plan.job
+    c = job.collection
+    if Store.exists(job.out_path):
+        store = Store.open(job.out_path)
+        if store.vocab_size != c.vocab_size:
+            raise ValueError(
+                f"store vocab {store.vocab_size} != collection vocab "
+                f"{c.vocab_size}"
+            )
+    else:
+        store = Store.create(job.out_path, c.vocab_size)
+    # a second handle opened before the commit: the refresh span below
+    # measures visibility — the time until an independent (serving-side)
+    # reader observes the new segment, exactly what ingest_bench gates
+    reader = Store.open(job.out_path)
+    df = np.bincount(c.terms, minlength=c.vocab_size).astype(np.int64)
+    seg = store.add_segment_from_rows(
+        rows, df=df, num_docs=c.num_docs, source=f"plan:{plan.method}",
+        single_commit=single_commit,
+    )
+    with obs.get_registry().span("ingest/refresh") as sp:
+        sp.set(visible=reader.refresh())
+    result.store = store
+    result.segment = seg
+    result.summary.setdefault("distinct_pairs", int(seg.nnz))
+    result.summary["segment"] = os.path.basename(seg.path)
+
+
+# ---------------------------------------------------------------------------
+# parallel ingest (spawned spill-shard workers + parallel bucket merge)
+# ---------------------------------------------------------------------------
+
+# below this much total run data the bucket-merge pool isn't spawned at all:
+# a fresh spawned interpreter costs ~0.5s before its first merge, which only
+# amortizes once the merge work is tens of MB
+_POOL_MIN_MERGE_BYTES = 48 << 20
+
+
+def _maybe_stall(workdir: str, worker: str, shard: int) -> None:
+    """Test-only injection point: ``REPRO_TEST_SPILL_STALL`` (a JSON object
+    ``{"worker": .., "shard": .., "seconds": ..}``) makes the matching worker
+    publish its pid to ``workdir/stall_<worker>.pid`` and sleep mid-shard —
+    after counting, before the completing flush — so a fault test can SIGKILL
+    it while it verifiably holds a lease with unpromoted spill output."""
+    spec = os.environ.get("REPRO_TEST_SPILL_STALL")
+    if not spec:
+        return
+    import json
+
+    cfg = json.loads(spec)
+    if cfg.get("worker") is not None and cfg["worker"] != worker:
+        return
+    if cfg.get("shard") is not None and int(cfg["shard"]) != shard:
+        return
+    marker = os.path.join(workdir, f"stall_{worker}.pid")
+    with open(marker + ".tmp", "w") as f:
+        f.write(str(os.getpid()))
+    os.replace(marker + ".tmp", marker)
+    deadline = time.time() + float(cfg.get("seconds", 60.0))
+    while time.time() < deadline:
+        time.sleep(0.05)
+
+
+def _spill_claim_loop(
+    tracker, spill_root, shards, method_name, fn, kwargs, V, budget_pairs,
+    worker, reg, workdir,
+) -> None:
+    """Claim → count → promote loop one participant runs against the shared
+    tracker (spawned workers and the parent's inline drain share it).
+
+    Each claimed shard is counted into a private ``wip_<worker>_<shard>``
+    directory (invisible to run discovery) while a heartbeat thread renews
+    the lease; the finished directory is promoted to ``shard_<shard>`` by an
+    atomic rename executed *under the tracker lock* as the completion's
+    commit — so a promoted directory and its done-record are never observed
+    apart, and a lost race (a backup task finished first) just discards the
+    duplicate attempt."""
+    import threading
+
+    from repro.store.builder import SpillSink, shard_dir_name, wip_dir_name
+
+    lease = tracker.lease_seconds
+    while True:
+        unit = tracker.claim(worker)
+        if unit is None:
+            if tracker.finished:
+                return
+            # another worker holds the last lease(s): wait for completion or
+            # expiry (claim() reclaims expired leases on the next attempt)
+            time.sleep(min(0.2, lease / 4.0))
+            continue
+        (s,) = unit
+        wip = os.path.join(spill_root, wip_dir_name(s, worker))
+        shutil.rmtree(wip, ignore_errors=True)
+        stop = threading.Event()
+
+        def _heartbeat(unit=unit):
+            while not stop.wait(lease / 3.0):
+                if not tracker.renew(unit, worker):
+                    return  # lease lost: completion would be ignored anyway
+
+        hb = threading.Thread(target=_heartbeat, daemon=True)
+        hb.start()
+        try:
+            with reg.span(
+                "ingest/count", shard=s, method=method_name,
+                docs=int(shards[s].num_docs), worker=worker,
+            ):
+                sink = SpillSink(
+                    V, memory_budget_pairs=budget_pairs, spill_dir=wip
+                )
+                fn(shards[s], sink, **kwargs)
+                _maybe_stall(workdir, worker, s)
+                sink.flush()
+        finally:
+            stop.set()
+            hb.join(timeout=lease)
+        final = os.path.join(spill_root, shard_dir_name(s))
+
+        def _promote(wip=wip, final=final):
+            shutil.rmtree(final, ignore_errors=True)
+            os.replace(wip, final)
+
+        if tracker.complete(unit, worker, commit=_promote):
+            reg.counter("ingest.docs_counted").inc(int(shards[s].num_docs))
+            reg.counter("ingest.shards_done").inc()
+        else:
+            shutil.rmtree(wip, ignore_errors=True)  # backup task lost
+
+
+def _dump_obs(reg, obs_dir: str, name: str) -> None:
+    """Persist a worker's full telemetry snapshot (metrics + span events)
+    for the parent to absorb into one cross-process trace."""
+    import json
+
+    path = os.path.join(obs_dir, f"{name}.json")
+    with open(path + ".tmp", "w") as f:
+        json.dump(reg.snapshot(include_events=True), f)
+    os.replace(path + ".tmp", path)
+
+
+def _spill_worker_main(workdir, worker, params, telemetry, ready_sem,
+                       start_evt) -> None:
+    """Spawn entry point for one parallel spill worker.
+
+    The corpus arrives via ``workdir/corpus.npz`` (not pickled args — spawn
+    re-imports everything anyway, and the file is shared by all workers);
+    sharding is recomputed locally and is deterministic, so every process
+    agrees on shard boundaries. The ready semaphore / start event pair lets
+    the parent exclude per-process setup (imports, corpus load) from
+    steady-state timing."""
+    from repro.core.specs import get_spec
+    from repro.data.corpus import Collection
+    from repro.data.preprocess import shard_documents
+    from repro.runtime.fault import SharedWorkTracker
+
+    reg = obs.configure(enabled=True) if telemetry else obs.get_registry()
+    data = np.load(os.path.join(workdir, "corpus.npz"))
+    c = Collection(data["doc_ptr"], data["terms"], int(data["vocab"]))
+    shards = shard_documents(c, int(params["num_shards"]))
+    spec = get_spec(params["method"])
+    tracker = SharedWorkTracker.open(
+        os.path.join(workdir, "claims.json"),
+        lease_seconds=float(params["lease_seconds"]),
+    )
+    ready_sem.release()
+    start_evt.wait(300.0)
+    _spill_claim_loop(
+        tracker, os.path.join(workdir, "spill"), shards, params["method"],
+        spec.fn, dict(params["method_kwargs"]), c.vocab_size,
+        int(params["memory_budget_pairs"]), worker, reg, workdir,
+    )
+    if telemetry:
+        _dump_obs(reg, os.path.join(workdir, "obs"), worker)
+
+
+def _merge_bucket_files(tasks, V, cap_pairs, reg, fail_after=None) -> None:
+    """Merge each task's bucket runs into one run-format file via an atomic
+    tmp + rename — a finished bucket file is the resumable unit, so a crashed
+    finalizer redoes only unfinished buckets. ``fail_after`` is the test-only
+    crash injection (raise after N fresh merges)."""
+    from repro.store.builder import merge_bucket_runs, write_rows_run
+
+    fresh = 0
+    for b, paths, out in tasks:
+        if os.path.exists(out):
+            continue
+        if fail_after is not None and fresh >= fail_after:
+            raise RuntimeError(
+                f"injected finalizer crash after {fresh} bucket merges"
+            )
+        with reg.span("ingest/bucket_merge_file", bucket=b, runs=len(paths)):
+            rows = merge_bucket_runs({b: paths}, V, cap_pairs=cap_pairs)
+            tmp = f"{out}.tmp-{os.getpid()}"
+            write_rows_run(tmp, rows, V)
+            os.replace(tmp, out)
+        fresh += 1
+
+
+def _bucket_merge_main(obs_dir, name, tasks, V, cap_pairs, telemetry) -> None:
+    """Spawn entry point for one bucket-merge pool worker."""
+    reg = obs.configure(enabled=True) if telemetry else obs.get_registry()
+    _merge_bucket_files(tasks, V, cap_pairs, reg)
+    if telemetry:
+        _dump_obs(reg, obs_dir, name)
+
+
+class ParallelExecutor:
+    """N-process parallel ingest for spill-policy plans.
+
+    The document shards PlanExecutor walks serially become a shared work
+    queue: ``num_workers`` spawned processes claim shards through a
+    :class:`repro.runtime.fault.SharedWorkTracker` (flock'd lease table with
+    TTL + heartbeat renewal), count each claimed shard into a private wip
+    directory, and promote it atomically on completion — so a SIGKILL'd
+    worker's shard is reclaimed after its lease expires and re-done by a
+    survivor (or, if every worker dies, drained inline by the parent).
+    Finalization merges the radix buckets — already independent by
+    construction — across a process pool into resumable per-bucket run
+    files, then streams them (ascending bucket = ascending primary range)
+    into the same output writers the serial path uses, committing a store
+    segment under one flock'd manifest commit.
+
+    The result is **byte-identical** to ``PlanExecutor`` for the same plan:
+    shard boundaries are deterministic, promoted run files are exactly what
+    the serial executor would have spilled, and the per-bucket merge output
+    depends only on the bucket's key→count map.
+
+    Example::
+
+        res = ParallelExecutor(num_workers=4).execute(plan, out_dir="/d/run")
+        # crashed mid-run? the same out_dir resumes: counted shards and
+        # merged buckets are skipped
+        res = ParallelExecutor(num_workers=4).execute(
+            plan, out_dir="/d/run", resume=True)
+    """
+
+    def __init__(
+        self,
+        num_workers: int = 2,
+        *,
+        lease_seconds: float = 15.0,
+        merge_workers: int | None = None,
+        ready_timeout: float = 180.0,
+        verbose: bool = False,
+    ):
+        if num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        self.num_workers = num_workers
+        self.lease_seconds = float(lease_seconds)
+        # None → num_workers, but only once the spilled data is big enough
+        # to amortize pool spawn cost (explicit values always get a pool)
+        self.merge_workers = merge_workers
+        self.ready_timeout = ready_timeout
+        self.verbose = verbose
+
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(msg)
+
+    # ------------------------------------------------------------------
+    def execute(
+        self,
+        plan: Plan,
+        *,
+        out_dir: str | None = None,
+        resume: bool = False,
+        on_ready=None,
+    ) -> ExecutionResult:
+        if plan.sink_policy != "spill":
+            # dense/stats merges are in-memory cheap: single process wins
+            self._log("[parallel] non-spill policy; delegating to serial")
+            return PlanExecutor(verbose=self.verbose).execute(
+                plan, out_dir=out_dir, resume=resume
+            )
+        with obs.get_registry().span(
+            "ingest/execute",
+            method=plan.method,
+            sink=plan.sink_policy,
+            output=plan.job.output,
+            shards=plan.job.num_shards,
+            docs=plan.job.collection.num_docs,
+            resume=resume,
+            workers=self.num_workers,
+        ):
+            return self._execute(
+                plan, out_dir=out_dir, resume=resume, on_ready=on_ready
+            )
+
+    def _execute(self, plan, *, out_dir, resume, on_ready) -> ExecutionResult:
+        from repro.data.preprocess import shard_documents
+        from repro.runtime.fault import SharedWorkTracker
+        from repro.store.builder import (
+            _iter_run,
+            discover_bucket_runs,
+            merge_row_streams,
+        )
+        from repro.store.spawn import spawn_friendly_env
+
+        job = plan.job
+        c = job.collection
+        V = c.vocab_size
+        own_workdir = out_dir is None
+        workdir = out_dir or tempfile.mkdtemp(prefix="cooc_par_")
+        spill_root = os.path.join(workdir, "spill")
+        merge_dir = os.path.join(workdir, "merge")
+        obs_dir = os.path.join(workdir, "obs")
+        claims = os.path.join(workdir, "claims.json")
+        t0 = time.time()
+        reg = obs.get_registry()
+
+        if not resume:
+            for d in (spill_root, merge_dir, obs_dir):
+                shutil.rmtree(d, ignore_errors=True)
+            for f in (claims, claims + ".lock"):
+                if os.path.exists(f):
+                    os.remove(f)
+        for d in (workdir, spill_root, merge_dir, obs_dir):
+            os.makedirs(d, exist_ok=True)
+
+        corpus_path = os.path.join(workdir, "corpus.npz")
+        if not (resume and os.path.exists(corpus_path)):
+            np.savez(
+                corpus_path, doc_ptr=c.doc_ptr, terms=c.terms,
+                vocab=np.int64(V),
+            )
+
+        shards = shard_documents(c, job.num_shards)
+        if resume and os.path.exists(claims):
+            tracker = SharedWorkTracker.open(
+                claims, lease_seconds=self.lease_seconds
+            )
+            self._heal_resumed(tracker, spill_root, job.num_shards)
+        else:
+            tracker = SharedWorkTracker.create(
+                claims,
+                [(s,) for s in range(job.num_shards)],
+                lease_seconds=self.lease_seconds,
+            )
+
+        telemetry = reg.enabled
+        t_ready = time.time()
+        if not tracker.finished:
+            params = {
+                "method": plan.method,
+                "method_kwargs": dict(plan.method_kwargs),
+                "num_shards": job.num_shards,
+                "memory_budget_pairs": job.memory_budget_pairs,
+                "lease_seconds": self.lease_seconds,
+            }
+            with spawn_friendly_env() as ctx:
+                ready = ctx.Semaphore(0)
+                start = ctx.Event()
+                procs = []
+                for i in range(self.num_workers):
+                    p = ctx.Process(
+                        target=_spill_worker_main,
+                        args=(workdir, f"w{i}", params, telemetry, ready,
+                              start),
+                        daemon=True,
+                    )
+                    p.start()
+                    procs.append(p)
+            # ready barrier: workers signal after import + corpus load, so
+            # timing from t_ready measures steady-state counting, not spawn
+            deadline = time.time() + self.ready_timeout
+            ready_n = 0
+            for _ in range(self.num_workers):
+                if ready.acquire(timeout=max(0.0, deadline - time.time())):
+                    ready_n += 1
+            t_ready = time.time()
+            if on_ready is not None:
+                on_ready()
+            start.set()
+            self._log(
+                f"[parallel] {ready_n}/{self.num_workers} workers ready in "
+                f"{t_ready - t0:.2f}s"
+            )
+            while any(p.is_alive() for p in procs):
+                time.sleep(0.05)
+            for p in procs:
+                p.join(timeout=5.0)
+            if not tracker.finished:
+                # every worker exited with work outstanding (crash storm or
+                # spawn failure): the parent drains the remaining shards
+                # through the same claim loop — progress is never hostage to
+                # worker liveness
+                self._log("[parallel] workers gone, work left; parent drains")
+                _spill_claim_loop(
+                    tracker, spill_root, shards, plan.method, plan.spec.fn,
+                    dict(plan.method_kwargs), V, job.memory_budget_pairs,
+                    "parent", reg, workdir,
+                )
+            if telemetry:
+                self._absorb_obs(reg, obs_dir)
+        t_counted = time.time()
+
+        by_bucket, legacy = discover_bucket_runs(spill_root)
+        if legacy:  # pre-bucketing runs: only a global k-way merge is correct
+            merged = merge_row_streams([_iter_run(p) for p in by_bucket[-1]])
+        else:
+            merged = self._merged_rows_parallel(
+                by_bucket, V, job, merge_dir, obs_dir, reg, telemetry
+            )
+
+        summary = {
+            "num_docs": c.num_docs,
+            "vocab_size": V,
+            "method": plan.method,
+            "output": job.output,
+            "num_shards": job.num_shards,
+            "exact": plan.exact,
+            "ingest_workers": self.num_workers,
+            "reclaimed_shards": tracker.reclaims,
+            "plan": plan.describe(),
+        }
+        result = ExecutionResult(summary=summary)
+        _emit_merged_rows(plan, merged, result, single_commit=True)
+
+        end = time.time()
+        summary.update(
+            {
+                "elapsed_s": round(end - t0, 2),
+                "ready_wait_s": round(min(t_ready, end) - t0, 2),
+                "count_s": round(t_counted - min(t_ready, t_counted), 2),
+                "finalize_s": round(end - t_counted, 2),
+                # steady-state work time: everything after the ready barrier
+                # (what the scaling gates compare across worker counts)
+                "work_s": round(end - min(t_ready, end), 2),
+                "docs_per_hour": round(
+                    c.num_docs / max(end - t0, 1e-9) * 3600
+                ),
+                "docs_per_hour_work": round(
+                    c.num_docs / max(end - t_ready, 1e-9) * 3600
+                ),
+            }
+        )
+        if own_workdir:
+            shutil.rmtree(workdir, ignore_errors=True)
+        return result
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _heal_resumed(tracker, spill_root: str, num_shards: int) -> None:
+        """Reconcile the lease table with what actually survived on disk:
+        wip partials and out-of-range/undone shard directories are pruned
+        (they must not contribute runs), and a done-recorded shard whose
+        promoted directory vanished is forced back to pending."""
+        from repro.store.builder import SHARD_DIR_RE
+
+        done = {u[0] for u in tracker.done_units()}
+        present: set[int] = set()
+        for d in glob.glob(os.path.join(spill_root, "*")):
+            base = os.path.basename(d)
+            m = SHARD_DIR_RE.match(base)
+            if m is None:
+                if base.startswith("wip_"):
+                    shutil.rmtree(d, ignore_errors=True)
+                continue
+            idx = int(m.group(1))
+            if idx in done and idx < num_shards:
+                present.add(idx)
+            else:
+                shutil.rmtree(d, ignore_errors=True)
+        for idx in sorted(done - present):
+            tracker.requeue((idx,))
+
+    @staticmethod
+    def _absorb_obs(reg, obs_dir: str) -> None:
+        """Fold every worker's dumped snapshot into the parent registry —
+        counters add, histograms merge, and span events land re-based on the
+        parent timeline, so one ``--trace-out`` file shows every process."""
+        import json
+
+        for p in sorted(glob.glob(os.path.join(obs_dir, "*.json"))):
+            try:
+                with open(p) as f:
+                    snap = json.load(f)
+            except (OSError, ValueError):  # half-written by a killed worker
+                continue
+            os.replace(p, p + ".absorbed")  # never double-absorbed on resume
+            # one absorb per worker so its spans carry proc=<worker name>
+            reg.absorb(snap, source=os.path.splitext(os.path.basename(p))[0])
+
+    def _merged_rows_parallel(
+        self, by_bucket, V, job, merge_dir, obs_dir, reg, telemetry
+    ):
+        """Merge each bucket's runs into ``merge_dir/bucket_*.run`` across a
+        process pool (buckets are independent by construction), then stream
+        the finished files back in ascending bucket order — primaries ascend
+        across buckets, so the concatenation is the globally merged stream."""
+        from repro.store.builder import _iter_run
+        from repro.store.spawn import spawn_friendly_env
+
+        cap = 4 * job.memory_budget_pairs
+        fail_after = os.environ.get("REPRO_TEST_FAIL_AFTER_MERGES")
+        fail_after = int(fail_after) if fail_after else None
+        outs, tasks = [], []
+        task_bytes = 0
+        for b in sorted(by_bucket):
+            out = os.path.join(merge_dir, f"bucket_{b:04d}.run")
+            outs.append(out)
+            if not os.path.exists(out):  # resume: finished buckets skipped
+                tasks.append((b, by_bucket[b], out))
+                task_bytes += sum(os.path.getsize(p) for p in by_bucket[b])
+        n_pool = min(self.merge_workers or self.num_workers, len(tasks))
+        if self.merge_workers is None:
+            # spawn cost (interpreter + imports per pool process) dwarfs the
+            # merge itself on small spills, and pool processes time-slice
+            # rather than parallelize without cores to run on: merge inline
+            # in either case (an explicit merge_workers= overrides both)
+            try:
+                cores = len(os.sched_getaffinity(0))
+            except AttributeError:
+                cores = os.cpu_count() or 1
+            if task_bytes < _POOL_MIN_MERGE_BYTES or cores < 2:
+                n_pool = min(n_pool, 1)
+        with reg.span(
+            "ingest/bucket_merge_pool", buckets=len(tasks),
+            workers=max(n_pool, 1),
+        ):
+            if tasks and n_pool > 1 and fail_after is None:
+                with spawn_friendly_env() as ctx:
+                    procs = [
+                        ctx.Process(
+                            target=_bucket_merge_main,
+                            args=(obs_dir, f"m{i}", tasks[i::n_pool], V, cap,
+                                  telemetry),
+                            daemon=True,
+                        )
+                        for i in range(n_pool)
+                    ]
+                    for p in procs:
+                        p.start()
+                for p in procs:
+                    p.join()
+                # buckets a dead pool worker left behind finish inline
+                left = [t for t in tasks if not os.path.exists(t[2])]
+                if left:
+                    self._log(f"[parallel] {len(left)} buckets redone inline")
+                    _merge_bucket_files(left, V, cap, reg)
+                if telemetry:
+                    self._absorb_obs(reg, obs_dir)
+            elif tasks:
+                _merge_bucket_files(tasks, V, cap, reg, fail_after=fail_after)
+
+        def stream():
+            for out in outs:
+                yield from _iter_run(out)
+
+        return stream()
 
 
 # ---------------------------------------------------------------------------

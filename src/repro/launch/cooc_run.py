@@ -56,6 +56,7 @@ def run(
     output: str = "pairs-file",
     trace_out: str | None = None,
     metrics_interval: float = 0.0,
+    ingest_workers: int = 1,
 ) -> dict:
     os.makedirs(out_dir, exist_ok=True)
     telemetry = bool(trace_out) or metrics_interval > 0
@@ -95,7 +96,18 @@ def run(
         dumper = threading.Thread(target=_dump_metrics, daemon=True)
         dumper.start()
     try:
-        res = plan.execute(out_dir=out_dir, ckpt_every=ckpt_every, resume=resume)
+        if ingest_workers > 1:
+            # spawned spill-shard workers behind a shared lease tracker;
+            # byte-identical output to the serial path (docs/architecture.md)
+            from repro.core.plan import ParallelExecutor
+
+            res = ParallelExecutor(
+                num_workers=ingest_workers, verbose=True
+            ).execute(plan, out_dir=out_dir, resume=resume)
+        else:
+            res = plan.execute(
+                out_dir=out_dir, ckpt_every=ckpt_every, resume=resume
+            )
     finally:
         stop_metrics.set()
         if dumper is not None:
@@ -140,6 +152,12 @@ def main():
         help="dump Prometheus-text metrics to stderr every S seconds "
              "(enables telemetry)",
     )
+    ap.add_argument(
+        "--ingest-workers", type=int, default=1,
+        help="count spill shards across N spawned worker processes "
+             "(byte-identical to serial; pays off once per-shard counting "
+             "dominates spawn cost — see docs/methods.md)",
+    )
     args = ap.parse_args()
     run(
         args.docs,
@@ -152,6 +170,7 @@ def main():
         output=args.output,
         trace_out=args.trace_out,
         metrics_interval=args.metrics_interval,
+        ingest_workers=args.ingest_workers,
     )
 
 

@@ -184,6 +184,7 @@ def merge_snapshots(snapshots) -> dict:
         Histogram.from_state(merged["histograms"]["lat"]).percentile(99)
     """
     out = {"counters": {}, "gauges": {}, "histograms": {}, "dropped_events": 0}
+    base_epoch = None
     for snap in snapshots:
         if not snap:
             continue
@@ -199,4 +200,18 @@ def merge_snapshots(snapshots) -> dict:
             else:
                 out["histograms"][name] = dict(state)
         out["dropped_events"] += snap.get("dropped_events", 0)
+        # span events (snapshots taken with include_events=True) concatenate
+        # onto the first contributing snapshot's timeline: each later
+        # snapshot's events are shifted by its unix-epoch offset, so one
+        # merged snapshot holds a coherent multi-process span log
+        events = snap.get("events")
+        if events:
+            epoch = snap.get("epoch_unix", 0.0)
+            if base_epoch is None:
+                base_epoch = epoch
+                out["epoch_unix"] = epoch
+            shift_us = (epoch - base_epoch) * 1e6
+            out.setdefault("events", []).extend(
+                dict(e, ts_us=e["ts_us"] + shift_us) for e in events
+            )
     return out

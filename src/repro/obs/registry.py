@@ -228,12 +228,20 @@ class Registry:
         }
         if include_events:
             snap["events"] = self.span_events()
+            # the events' ts_us are relative to THIS registry's epoch; the
+            # unix anchor lets an absorbing registry re-base them onto its
+            # own timeline (cross-process trace merging)
+            snap["epoch_unix"] = self.epoch_unix
         return snap
 
-    def absorb(self, snapshot: dict) -> None:
+    def absorb(self, snapshot: dict, *, source: str | None = None) -> None:
         """Merge a snapshot's metrics into this registry (counters add,
         histograms merge bucket-wise) — the parent-side half of the
-        worker-snapshot protocol."""
+        worker-snapshot protocol. Span events, when the snapshot carries
+        them (``snapshot(include_events=True)``), are re-based onto this
+        registry's timeline via the snapshot's unix epoch anchor and
+        appended — so one parent trace shows every worker's ingest spans.
+        ``source`` tags absorbed events' args (e.g. the worker name)."""
         for name, v in snapshot.get("counters", {}).items():
             self.counter(name).inc(v)
         for name, v in snapshot.get("gauges", {}).items():
@@ -241,6 +249,19 @@ class Registry:
         for name, state in snapshot.get("histograms", {}).items():
             self.histogram(name).merge(Histogram.from_state(state))
         self.dropped_events += snapshot.get("dropped_events", 0)
+        events = snapshot.get("events") or []
+        if events:
+            shift_us = (
+                snapshot.get("epoch_unix", self.epoch_unix) - self.epoch_unix
+            ) * 1e6
+            for e in events:
+                if len(self._events) >= self.max_events:
+                    self.dropped_events += 1
+                    continue
+                e = dict(e, ts_us=e["ts_us"] + shift_us)
+                if source is not None:
+                    e["args"] = {**e.get("args", {}), "proc": source}
+                self._events.append(e)
 
     # ------------------------------------------------------------ exports
     def chrome_trace(self) -> dict:

@@ -21,8 +21,10 @@ csr_store._write_symmetric).
 
 from __future__ import annotations
 
+import glob as _glob
 import heapq
 import os
+import re
 import shutil
 import tempfile
 
@@ -33,6 +35,97 @@ from repro.core.types import group_bounds, iter_pair_file
 
 # radix partition width: at most 2^BUCKET_BITS primary-range buckets
 BUCKET_BITS = 8
+
+# a completed spill shard's directory (promoted atomically by the executor
+# that owns it); in-flight attempts live in wip_* directories that this
+# pattern deliberately does not match, so run discovery never sees partials
+SHARD_DIR_RE = re.compile(r"^shard_(\d+)$")
+_RUN_NAME_RE = re.compile(r"^run_\d+_b(\d+)\.bin$")
+
+
+def shard_dir_name(shard: int) -> str:
+    """Canonical name of a completed spill shard's run directory."""
+    return f"shard_{shard:05d}"
+
+
+def wip_dir_name(shard: int, worker: str) -> str:
+    """Name of one worker's in-flight attempt at a shard — distinct per
+    (shard, worker) so concurrent attempts (a straggler plus its backup
+    task) never collide, and never matched by :data:`SHARD_DIR_RE` so a
+    crashed attempt's partial runs are invisible to run discovery."""
+    return f"wip_{worker}_{shard:05d}"
+
+
+def discover_bucket_runs(spill_root: str) -> tuple[dict[int, list[str]], bool]:
+    """Group every completed shard's run files by radix bucket.
+
+    Walks ``spill_root/shard_*/run_*_b*.bin`` — the naming every SpillSink
+    uses, whichever process wrote it — and returns ``(by_bucket, legacy)``.
+    ``legacy`` is True when a pre-bucketing run file (no ``_b`` suffix, from
+    a resumed old spill directory) is present, in which case the caller must
+    fall back to one global k-way merge; ``by_bucket`` then maps bucket -1
+    to every run path. Paths are sorted, so the grouping is deterministic
+    across processes."""
+    runs = sorted(
+        p
+        for d in _glob.glob(os.path.join(spill_root, "shard_*"))
+        if SHARD_DIR_RE.match(os.path.basename(d))
+        for p in _glob.glob(os.path.join(d, "run_*.bin"))
+    )
+    by_bucket: dict[int, list[str]] = {}
+    for p in runs:
+        m = _RUN_NAME_RE.match(os.path.basename(p))
+        if m is None:
+            return {-1: runs}, True
+        by_bucket.setdefault(int(m.group(1)), []).append(p)
+    return by_bucket, False
+
+
+def write_rows_run(path: str, rows, V: int, *,
+                   buffer_pairs: int = 1 << 20) -> int:
+    """Stream merged (primary, secondaries, counts) rows into one run-format
+    file (the exact bytes ``_write_run`` would produce for the same rows),
+    buffering ~``buffer_pairs`` pairs between writes so a huge bucket never
+    materializes in memory. Counts must fit the run format's u32 — final
+    merged counts, like spilled ones, are checked. Returns the pair count.
+
+    The parallel finalizer uses this to persist one bucket's fully merged
+    rows as a resumable intermediate: re-reading it with ``_iter_run``
+    yields back exactly the rows that went in."""
+    total = 0
+    pend_keys: list[np.ndarray] = []
+    pend_cnts: list[np.ndarray] = []
+    pending = 0
+    with open(path, "wb") as f:
+
+        def _flush():
+            nonlocal pending
+            if not pending:
+                return
+            keys = np.concatenate(pend_keys)
+            cnts = np.concatenate(pend_cnts)
+            pend_keys.clear()
+            pend_cnts.clear()
+            pending = 0
+            _write_run_into(f, keys, cnts, V)
+
+        for primary, secs, cnts in rows:
+            cnts = np.asarray(cnts, dtype=np.int64)
+            if len(cnts) and int(cnts.max()) >= 1 << 32:
+                raise OverflowError(
+                    f"merged count {int(cnts.max())} exceeds the u32 run "
+                    "format"
+                )
+            pend_keys.append(
+                np.int64(primary) * V + np.asarray(secs, dtype=np.int64)
+            )
+            pend_cnts.append(cnts)
+            pending += len(cnts)
+            total += len(cnts)
+            if pending >= buffer_pairs:
+                _flush()
+        _flush()
+    return total
 
 
 def sum_by_key(keys: np.ndarray, cnts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
@@ -61,6 +154,15 @@ def _write_run(path: str, keys: np.ndarray, cnts: np.ndarray, V: int) -> None:
     """Write sorted unique packed keys as one run file (paper binary format)
     in a single ``tofile`` — the whole file image is assembled with two
     scatter assignments instead of per-row struct packing + writes."""
+    with open(path, "wb") as f:
+        _write_run_into(f, keys, cnts, V)
+
+
+def _write_run_into(f, keys: np.ndarray, cnts: np.ndarray, V: int) -> None:
+    """One run-format image of whole rows appended to an open file. Chunks
+    written back to back stay a valid run as long as every chunk holds whole
+    rows and primaries ascend across chunks (``write_rows_run`` guarantees
+    both)."""
     prims = keys // V
     bounds = group_bounds(prims)
     starts = bounds[:-1]
@@ -77,7 +179,7 @@ def _write_run(path: str, keys: np.ndarray, cnts: np.ndarray, V: int) -> None:
     sec_pos = 2 * rpp + 2 + 2 * np.arange(npairs, dtype=np.int64)
     out[sec_pos] = keys % V
     out[sec_pos + 1] = cnts
-    out.tofile(path)
+    out.tofile(f)
 
 
 def _load_run(path: str, V: int) -> tuple[np.ndarray, np.ndarray]:

@@ -303,10 +303,39 @@ class Store:
         df: np.ndarray | None = None,
         num_docs: int = 0,
         source: str = "rows",
+        single_commit: bool = False,
     ):
         """Write a merged (primary, secondaries, counts) row stream — strictly
         ascending primaries, unique pairs — as a new segment. The single
-        segment-adding primitive behind counting, ingest, and compaction."""
+        segment-adding primitive behind counting, ingest, and compaction.
+
+        ``single_commit=True`` writes the segment into a hidden pending
+        directory first and then performs **one** flock'd manifest commit
+        that allocates the name, renames the directory into place, and
+        appends it — instead of the default reserve-then-append pair of
+        commits. The parallel-ingest finalizer uses this so a crash leaves
+        either no trace (an unreferenced pending dir) or the fully
+        committed segment, never a reserved-but-absent name."""
+        if single_commit:
+            tmp_dir = os.path.join(
+                self.path, f".pending-{os.getpid()}-{id(rows):x}"
+            )
+            shutil.rmtree(tmp_dir, ignore_errors=True)
+            write_segment(
+                tmp_dir, rows, self.vocab_size, df=df, num_docs=num_docs,
+                source=source, version=self.segment_version,
+            )
+            holder: dict = {}
+
+            def mut(m):
+                name = f"seg-{m['next_seg_id']:05d}"
+                m["next_seg_id"] += 1
+                os.replace(tmp_dir, os.path.join(self.path, name))
+                m["segments"].append(name)
+                holder["name"] = name
+
+            self._commit(mut)
+            return self._segment(holder["name"])
         name, seg_dir = self._reserve_segment()
         write_segment(
             seg_dir, rows, self.vocab_size, df=df, num_docs=num_docs,

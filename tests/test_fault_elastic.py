@@ -1,5 +1,8 @@
 """Fault tolerance + elastic re-meshing + end-to-end fault-injected counting."""
 
+import os
+import time
+
 import numpy as np
 import pytest
 
@@ -31,6 +34,19 @@ def test_tracker_lease_expiry_reenqueues():
     assert t.expire(now=11.0) == [u]        # straggler → re-enqueued
     u2 = t.claim("fast", now=12.0)
     assert u2 == u
+
+
+def test_tracker_claim_reclaims_stale_lease():
+    """Regression: a lease acquired and then never renewed must not block
+    the unit forever under a second claimer — claim() itself expires stale
+    leases once the pending queue is empty, without relying on the (dead)
+    owner's scheduling loop to call expire()."""
+    t = WorkTracker([(0,)])
+    u = t.claim("dead", now=0.0, lease_seconds=5.0)
+    assert t.claim("live", now=3.0) is None   # lease still current
+    assert t.claim("live", now=6.0) == u      # stale → reclaimed at claim
+    assert t.complete(u, "live")
+    assert t.finished
 
 
 def test_tracker_worker_failure():
@@ -96,6 +112,169 @@ def test_rebalance_minimizes_movement():
     assert set(assign.values()) <= set(new)
     counts = [list(assign.values()).count(w) for w in new]
     assert max(counts) - min(counts) <= 1
+
+
+# ------------------------------------------------- parallel-ingest faults
+def _spill_plan(cd, out_path, *, num_shards=6, budget=1 << 12):
+    from repro.core.plan import CountJob, Planner
+
+    plan = Planner().plan(
+        CountJob(
+            collection=cd,
+            output="store",
+            out_path=out_path,
+            method="list-scan",
+            num_shards=num_shards,
+            dense_vocab_cap=1,           # force the spill policy
+            memory_budget_pairs=budget,
+            df_descending=True,
+            use_kernel=False,
+        )
+    )
+    assert plan.sink_policy == "spill"
+    return plan
+
+
+def _segment_files(store_dir):
+    import glob
+
+    segs = sorted(glob.glob(os.path.join(store_dir, "seg-*")))
+    assert len(segs) == 1, segs
+    out = {}
+    for p in sorted(glob.glob(os.path.join(segs[0], "*.bin"))):
+        with open(p, "rb") as f:
+            out[os.path.basename(p)] = f.read()
+    return out
+
+
+@pytest.fixture()
+def fault_corpus():
+    from repro.data.preprocess import remap_df_descending
+
+    c = synthetic_zipf_collection(90, vocab=300, mean_len=12, seed=7)
+    cd, _ = remap_df_descending(c)
+    return cd
+
+
+def test_parallel_ingest_survives_sigkilled_worker(
+    tmp_path, monkeypatch, fault_corpus
+):
+    """SIGKILL a spill worker mid-shard (lease held, spill output still in
+    its wip directory): the lease expires, a survivor reclaims the shard,
+    and the final segment is byte-identical to a serial build."""
+    import json
+    import signal
+    import threading
+
+    from repro.core.plan import ParallelExecutor, PlanExecutor
+
+    cd = fault_corpus
+    serial_plan = _spill_plan(cd, str(tmp_path / "store_ser"))
+    PlanExecutor().execute(serial_plan, out_dir=str(tmp_path / "wd_ser"))
+    want = _segment_files(str(tmp_path / "store_ser"))
+
+    # worker w0 will stall after counting its first claimed shard, publish
+    # its pid, and hold the lease via heartbeats until we SIGKILL it
+    monkeypatch.setenv(
+        "REPRO_TEST_SPILL_STALL", json.dumps({"worker": "w0", "seconds": 120})
+    )
+    wd = str(tmp_path / "wd_par")
+    plan = _spill_plan(cd, str(tmp_path / "store_par"))
+    ex = ParallelExecutor(num_workers=2, lease_seconds=2.0)
+    holder = {}
+    th = threading.Thread(
+        target=lambda: holder.update(res=ex.execute(plan, out_dir=wd)),
+        daemon=True,
+    )
+    th.start()
+    marker = os.path.join(wd, "stall_w0.pid")
+    deadline = time.time() + 90.0
+    while not os.path.exists(marker) and time.time() < deadline:
+        time.sleep(0.02)
+    assert os.path.exists(marker), "stalled worker never published its pid"
+    os.kill(int(open(marker).read()), signal.SIGKILL)
+    th.join(timeout=180.0)
+    assert not th.is_alive(), "parallel ingest did not finish after the kill"
+
+    res = holder["res"]
+    assert res.summary["reclaimed_shards"] >= 1     # the lease was reclaimed
+    assert _segment_files(str(tmp_path / "store_par")) == want
+
+
+def test_parallel_ingest_parent_drains_when_all_workers_die(
+    tmp_path, monkeypatch, fault_corpus
+):
+    """Crash storm: with every worker dead and shards outstanding, the
+    parent drains the queue inline through the same claim loop — output is
+    still byte-identical."""
+    import json
+    import signal
+    import threading
+
+    from repro.core.plan import ParallelExecutor, PlanExecutor
+
+    cd = fault_corpus
+    serial_plan = _spill_plan(cd, str(tmp_path / "store_ser"))
+    PlanExecutor().execute(serial_plan, out_dir=str(tmp_path / "wd_ser"))
+    want = _segment_files(str(tmp_path / "store_ser"))
+
+    monkeypatch.setenv(
+        "REPRO_TEST_SPILL_STALL", json.dumps({"worker": "w0", "seconds": 120})
+    )
+    wd = str(tmp_path / "wd_par")
+    plan = _spill_plan(cd, str(tmp_path / "store_par"))
+    ex = ParallelExecutor(num_workers=1, lease_seconds=1.5)  # lone worker
+    holder = {}
+    th = threading.Thread(
+        target=lambda: holder.update(res=ex.execute(plan, out_dir=wd)),
+        daemon=True,
+    )
+    th.start()
+    marker = os.path.join(wd, "stall_w0.pid")
+    deadline = time.time() + 90.0
+    while not os.path.exists(marker) and time.time() < deadline:
+        time.sleep(0.02)
+    assert os.path.exists(marker)
+    os.kill(int(open(marker).read()), signal.SIGKILL)
+    th.join(timeout=180.0)
+    assert not th.is_alive()
+
+    res = holder["res"]
+    assert res.summary["reclaimed_shards"] >= 1
+    assert _segment_files(str(tmp_path / "store_par")) == want
+
+
+def test_parallel_finalizer_crash_resumes(tmp_path, monkeypatch, fault_corpus):
+    """Kill the finalizer between bucket merges: the already-merged bucket
+    files survive as resumable intermediates, and a resume completes from
+    them (without redoing them) to a byte-identical segment."""
+    import glob
+
+    from repro.core.plan import ParallelExecutor, PlanExecutor
+
+    cd = fault_corpus
+    serial_plan = _spill_plan(cd, str(tmp_path / "store_ser"))
+    PlanExecutor().execute(serial_plan, out_dir=str(tmp_path / "wd_ser"))
+    want = _segment_files(str(tmp_path / "store_ser"))
+
+    wd = str(tmp_path / "wd_par")
+    plan = _spill_plan(cd, str(tmp_path / "store_par"))
+    monkeypatch.setenv("REPRO_TEST_FAIL_AFTER_MERGES", "2")
+    with pytest.raises(RuntimeError, match="injected finalizer crash"):
+        ParallelExecutor(num_workers=1).execute(plan, out_dir=wd)
+    survivors = sorted(glob.glob(os.path.join(wd, "merge", "bucket_*.run")))
+    assert len(survivors) == 2          # exactly the pre-crash merges remain
+    before = {p: os.stat(p).st_mtime_ns for p in survivors}
+
+    monkeypatch.delenv("REPRO_TEST_FAIL_AFTER_MERGES")
+    res = ParallelExecutor(num_workers=1).execute(
+        plan, out_dir=wd, resume=True
+    )
+    assert _segment_files(str(tmp_path / "store_par")) == want
+    assert res.summary["exact"] is True
+    # the surviving bucket files were reused, not redone
+    for p, mtime in before.items():
+        assert os.stat(p).st_mtime_ns == mtime
 
 
 def test_fault_injected_counting_is_exact():

@@ -1,0 +1,287 @@
+"""Parallel ingest: spawned spill-shard workers behind a shared lease
+tracker, plus the parallel bucket-merge finalizer, must produce output
+byte-identical to the serial PlanExecutor — for every ingest method, any
+worker count, and random corpora. Also unit-tests the SharedWorkTracker
+lease discipline the workers coordinate through."""
+
+import glob
+import os
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+try:  # the property test richens coverage when hypothesis is available;
+    # the deterministic random-corpora sweep below always runs
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.list_scan import count_list_scan_loop
+from repro.core.plan import CountJob, ParallelExecutor, Planner, PlanExecutor
+from repro.core.types import DenseSink
+from repro.data.corpus import synthetic_zipf_collection
+from repro.data.preprocess import preprocess_documents, remap_df_descending
+from repro.runtime.fault import SharedWorkTracker
+
+# the ingest write-path methods (same set the ingest benchmark sweeps)
+INGEST_METHODS = ["list-scan", "list-blocks", "freq-split", "list-scan-segment"]
+
+VOCAB = 40
+
+
+def random_corpus(seed: int):
+    """A random raw corpus (duplicates, unsorted) through the full
+    preprocessing path — deterministic per seed, so serial/parallel builds
+    see the identical collection."""
+    rng = np.random.default_rng(seed)
+    docs = [
+        rng.integers(0, VOCAB, size=int(rng.integers(0, 25))).tolist()
+        for _ in range(int(rng.integers(1, 25)))
+    ]
+    return preprocess_documents(docs, vocab_size=VOCAB)
+
+
+# ------------------------------------------------------------------ helpers
+def build_store(cd, method, out_root, executor, *, num_shards=4, budget=512):
+    """Plan + execute a store build under the spill policy (dense_vocab_cap
+    is forced to 1 so even tiny test vocabularies take the spill path the
+    parallel executor parallelizes)."""
+    job = CountJob(
+        collection=cd,
+        output="store",
+        out_path=os.path.join(out_root, "store"),
+        method=method,
+        num_shards=num_shards,
+        dense_vocab_cap=1,
+        memory_budget_pairs=budget,
+        df_descending=True,
+        use_kernel=False,
+    )
+    plan = Planner().plan(job)
+    assert plan.sink_policy == "spill"
+    res = executor.execute(plan, out_dir=os.path.join(out_root, "wd"))
+    return res
+
+
+def segment_files(store_dir):
+    """{filename: bytes} of the store's single segment's binary arrays."""
+    segs = sorted(glob.glob(os.path.join(store_dir, "seg-*")))
+    assert len(segs) == 1, segs
+    out = {}
+    for p in sorted(glob.glob(os.path.join(segs[0], "*.bin"))):
+        with open(p, "rb") as f:
+            out[os.path.basename(p)] = f.read()
+    assert out, "segment has no binary arrays"
+    return out
+
+
+# ------------------------------------------------- SharedWorkTracker units
+def test_shared_tracker_flow(tmp_path):
+    path = str(tmp_path / "claims.json")
+    t = SharedWorkTracker.create(path, [(0,), (1,)], lease_seconds=30.0)
+    u = t.claim("a")
+    assert u == (0,)
+    assert t.renew(u, "a") is True
+    assert t.renew(u, "b") is False           # not the lease holder
+    committed = []
+    assert t.complete(u, "a", commit=lambda: committed.append(u)) is True
+    assert committed == [u]
+    assert t.complete(u, "a") is False        # duplicate ignored
+    assert t.snapshot()["completions_ignored"] == 1
+    # a second process opens the same state file and sees the same queue
+    u2 = SharedWorkTracker.open(path).claim("b")
+    assert u2 == (1,)
+    assert not t.finished                     # (1,) still leased
+    assert t.complete(u2, "b")
+    assert t.finished
+    assert t.done_units() == {(0,), (1,)}
+
+
+def test_shared_tracker_ttl_reclaim(tmp_path):
+    """A lease acquired and never renewed must not block the shard forever:
+    a second claimer reclaims it once the TTL deadline passes."""
+    t = SharedWorkTracker.create(
+        str(tmp_path / "c.json"), [(0,)], lease_seconds=0.2
+    )
+    u = t.claim("dead")
+    assert t.claim("live") is None            # lease still current
+    time.sleep(0.3)
+    assert t.claim("live") == u               # expired → reclaimed
+    assert t.reclaims == 1
+    assert t.renew(u, "dead") is False        # original lost the lease
+    assert t.complete(u, "live")
+    assert t.complete(u, "dead") is False     # late straggler ignored
+    assert t.finished
+
+
+def test_shared_tracker_renew_keeps_lease_alive(tmp_path):
+    t = SharedWorkTracker.create(
+        str(tmp_path / "c.json"), [(0,)], lease_seconds=0.3
+    )
+    u = t.claim("w")
+    for _ in range(4):                        # heartbeats outlive the TTL
+        time.sleep(0.15)
+        assert t.renew(u, "w") is True
+    assert t.claim("thief") is None           # never reclaimable while renewed
+    assert t.complete(u, "w")
+
+
+def test_shared_tracker_requeue_drops_done_record(tmp_path):
+    t = SharedWorkTracker.create(str(tmp_path / "c.json"), [(3,)])
+    u = t.claim("w")
+    assert t.complete(u, "w")
+    assert t.finished
+    t.requeue(u)                              # committed artifact went missing
+    assert not t.finished
+    assert t.done_units() == set()
+    assert t.claim("w2") == u
+
+
+def test_shared_tracker_failed_commit_keeps_unit_undone(tmp_path):
+    """complete() runs the commit under the lock BEFORE recording done — a
+    commit that raises must leave the unit leased/undone, so the lease TTL
+    eventually hands it to another worker."""
+    t = SharedWorkTracker.create(
+        str(tmp_path / "c.json"), [(0,)], lease_seconds=0.2
+    )
+    u = t.claim("w")
+
+    def boom():
+        raise RuntimeError("rename failed")
+
+    with pytest.raises(RuntimeError, match="rename failed"):
+        t.complete(u, "w", commit=boom)
+    assert t.done_units() == set()
+    time.sleep(0.3)
+    assert t.claim("retry") == u
+
+
+# ----------------------------------------------------- byte-identity tests
+def _check_byte_identical(c, workers: int, method: str,
+                          serial_cache: dict | None = None) -> None:
+    """Parallel build vs serial build vs count_list_scan_loop-seeded oracle
+    for one (corpus, worker count, method) combination."""
+    cd, _ = remap_df_descending(c)
+    oracle = DenseSink(cd.vocab_size)
+    count_list_scan_loop(cd, oracle)
+    with tempfile.TemporaryDirectory(prefix="par_prop_") as td:
+        if serial_cache is not None and method in serial_cache:
+            serial = serial_cache[method]
+        else:
+            a = os.path.join(td, "a")
+            build_store(cd, method, a, PlanExecutor())
+            serial = segment_files(os.path.join(a, "store"))
+            if serial_cache is not None:
+                serial_cache[method] = serial
+        b = os.path.join(td, "b")
+        res = build_store(
+            cd, method, b, ParallelExecutor(num_workers=workers)
+        )
+        assert segment_files(os.path.join(b, "store")) == serial
+        assert np.array_equal(res.store.dense(), oracle.mat)
+        assert res.summary["ingest_workers"] == workers
+        assert res.summary["exact"] is True
+
+
+# serial reference bytes per method, shared across the worker-count sweep
+# (the corpus is deterministic per method, so the reference is too)
+_SERIAL_CACHE: dict = {}
+
+
+@pytest.mark.parametrize("workers", [1, 2, 4])
+@pytest.mark.parametrize("method", INGEST_METHODS)
+def test_parallel_ingest_byte_identical(method, workers):
+    """Random corpora, worker counts N ∈ {1, 2, 4}, every ingest method:
+    the parallel build's segment is byte-for-byte the serial executor's,
+    and both equal the count_list_scan_loop-seeded oracle."""
+    c = random_corpus(seed=100 + INGEST_METHODS.index(method))
+    _check_byte_identical(c, workers, method, serial_cache=_SERIAL_CACHE)
+
+
+def test_parallel_ingest_empty_corpus():
+    """Degenerate corpus (no pairs at all) still round-trips: empty shards
+    promote, zero buckets merge, and the empty segments match."""
+    c = preprocess_documents([[], [7], []], vocab_size=VOCAB)
+    _check_byte_identical(c, 2, "list-scan")
+
+
+if HAVE_HYPOTHESIS:
+    documents = st.lists(
+        st.lists(st.integers(0, VOCAB - 1), min_size=0, max_size=25),
+        min_size=1,
+        max_size=25,
+    )
+
+    @st.composite
+    def corpora(draw):
+        return preprocess_documents(draw(documents), vocab_size=VOCAB)
+
+    @settings(max_examples=6, deadline=None)
+    @given(corpora(), st.sampled_from([1, 2, 4]),
+           st.sampled_from(INGEST_METHODS))
+    def test_parallel_ingest_byte_identical_property(c, workers, method):
+        _check_byte_identical(c, workers, method)
+
+
+def test_parallel_merge_pool_explicit_below_threshold(tmp_path):
+    """Small spills merge inline by default (pool spawn cost would dominate),
+    but an explicit merge_workers= forces the bucket-merge process pool —
+    which must still produce byte-identical segments."""
+    c = random_corpus(seed=321)
+    cd, _ = remap_df_descending(c)
+    a = str(tmp_path / "a")
+    build_store(cd, "list-scan", a, PlanExecutor())
+    want = segment_files(os.path.join(a, "store"))
+    b = str(tmp_path / "b")
+    build_store(
+        cd, "list-scan", b,
+        ParallelExecutor(num_workers=2, merge_workers=2),
+    )
+    assert segment_files(os.path.join(b, "store")) == want
+
+
+def test_parallel_pairs_file_identical(tmp_path):
+    """The pairs-file output target goes through the same shared row
+    emitter: parallel bytes == serial bytes."""
+    c = synthetic_zipf_collection(150, vocab=500, mean_len=12, seed=13)
+    cd, _ = remap_df_descending(c)
+
+    def build(out_root, executor):
+        job = CountJob(
+            collection=cd,
+            output="pairs-file",
+            out_path=os.path.join(out_root, "pairs.bin"),
+            method="list-scan",
+            num_shards=5,
+            memory_budget_pairs=1 << 12,
+            df_descending=True,
+            use_kernel=False,
+        )
+        plan = Planner().plan(job)
+        assert plan.sink_policy == "spill"
+        executor.execute(plan, out_dir=os.path.join(out_root, "wd"))
+        with open(os.path.join(out_root, "pairs.bin"), "rb") as f:
+            return f.read()
+
+    a = build(str(tmp_path / "a"), PlanExecutor())
+    b = build(str(tmp_path / "b"), ParallelExecutor(num_workers=2))
+    assert a == b
+
+
+def test_parallel_delegates_non_spill_policies(tmp_path):
+    """Dense-policy plans fall back to the serial executor (in-memory merges
+    gain nothing from process fan-out) and still produce exact output."""
+    c = synthetic_zipf_collection(40, vocab=60, mean_len=8, seed=2)
+    job = CountJob(collection=c, output="dense", method="list-scan")
+    plan = Planner().plan(job)
+    assert plan.sink_policy == "dense"
+    res = ParallelExecutor(num_workers=2).execute(
+        plan, out_dir=str(tmp_path / "wd")
+    )
+    from repro.core.oracle import brute_force_counts
+
+    assert np.array_equal(res.counts, brute_force_counts(c))

@@ -577,3 +577,78 @@ def test_compact_while_reader_holds_segments(coll, oracle, tmp_path):
     assert before[0].tobytes() == after[0].tobytes()
     assert before[1].tobytes() == after[1].tobytes()
     np.testing.assert_array_equal(reader.dense(), oracle)
+
+
+def test_add_segment_single_commit(tmp_path):
+    """single_commit writes the segment into a hidden pending directory and
+    publishes it with ONE manifest commit: name allocation, rename, and
+    append land together, and no pending dir survives."""
+    import glob
+
+    path = str(tmp_path / "s")
+    store = Store.create(path, 10)
+    rows = [(0, np.array([3, 7], dtype=np.int64), np.array([2, 5], dtype=np.int64))]
+    gen0 = store.manifest["generation"]
+    seg = store.add_segment_from_rows(iter(rows), num_docs=1, single_commit=True)
+    assert store.segment_names == [os.path.basename(seg.path)]
+    assert store.manifest["next_seg_id"] == 1
+    assert store.manifest["generation"] == gen0 + 1   # exactly one commit
+    assert glob.glob(os.path.join(path, ".pending-*")) == []
+    assert store.pair_count(0, 3) == 2
+    assert store.pair_count(0, 7) == 5
+    # a reader that refreshes never observes a reserved-but-absent name
+    reader = Store.open(path)
+    for name in reader.segment_names:
+        assert os.path.isdir(os.path.join(path, name))
+
+
+def test_concurrent_appenders_never_drop_segments(tmp_path):
+    """PR-7 manifest stress: two processes appending segments in a tight
+    loop — one through the default reserve-then-append commit pair, one
+    through single_commit — never drop a generation, lose an append, or
+    collide on a segment id."""
+    import subprocess
+    import sys
+
+    import repro
+
+    path = str(tmp_path / "s")
+    store = Store.create(path, 50)
+    script = (
+        "import sys\n"
+        "import numpy as np\n"
+        "from repro.store import Store\n"
+        "store_dir, who, mode = sys.argv[1], int(sys.argv[2]), sys.argv[3]\n"
+        "store = Store.open(store_dir)\n"
+        "for k in range(6):\n"
+        "    rows = [(who, np.array([10 + k], dtype=np.int64),\n"
+        "             np.array([1], dtype=np.int64))]\n"
+        "    store.add_segment_from_rows(\n"
+        "        iter(rows), num_docs=1, source=f'stress-{who}-{k}',\n"
+        "        single_commit=(mode == 'single'))\n"
+    )
+    src_root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src_root + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", script, path, str(who), mode], env=env
+        )
+        for who, mode in ((0, "two-commit"), (1, "single"))
+    ]
+    for p in procs:
+        assert p.wait(timeout=180) == 0
+
+    store = Store.open(path)
+    names = store.segment_names
+    assert len(names) == 12 and len(set(names)) == 12   # nothing lost
+    ids = sorted(int(n.split("-")[1]) for n in names)
+    assert store.manifest["next_seg_id"] == max(ids) + 1
+    for name in names:                       # every committed dir exists
+        assert os.path.isdir(os.path.join(path, name))
+    # counts additive across all 12 appends: each writer hit 6 distinct pairs
+    for who in (0, 1):
+        for k in range(6):
+            assert store.pair_count(who, 10 + k) == 1
