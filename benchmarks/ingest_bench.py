@@ -175,7 +175,9 @@ def _store_segment_files(store_dir: str) -> dict[str, bytes]:
     assert len(segs) == 1, segs
     out = {}
     for p in sorted(glob.glob(os.path.join(segs[0], "*"))):
-        if os.path.isfile(p):
+        # meta.json carries the wall-clock created_unix stamp, so it can
+        # never be byte-identical across two builds; the arrays must be
+        if os.path.isfile(p) and os.path.basename(p) != "meta.json":
             with open(p, "rb") as f:
                 out[os.path.basename(p)] = f.read()
     assert out, "segment directory has no files"

@@ -1,0 +1,363 @@
+"""Streaming freshness benchmark: the continuous-ingest perf artifact.
+
+The batch benchmarks measure docs/hour to a *final* store; this one
+measures the streaming subsystem's contract (``BENCH_streaming.json``):
+
+* **lag axis** — a paced producer appends documents to a feed file at a
+  fixed rate while a :class:`repro.stream.StreamIngestor` tails it under a
+  visibility-lag budget; per-document doc-to-queryable latency (arrival →
+  manifest commit) is recorded and the **gate** requires p99 ≤ budget.
+* **drain axis** — the same ingestor against a pre-written backlog:
+  sustained ingest docs/hour with the lag budget's seal cadence (micro-
+  segments of ``seal_docs``), the streaming counterpart of
+  ``BENCH_ingest.json``'s batch docs/hour.
+* **identity gate** — after the lag axis, the streamed store is fully
+  compacted and every array of its single segment (``row_ptr``/``cols``/
+  ``counts``, the symmetric adjacency, ``df``) must be **byte-identical**
+  to a one-shot batch build of the same collection: counts are additive
+  and exact, so micro-batch boundaries must leave no trace.
+* **resume axis** — a ``cooc_stream`` subprocess ingests the same feed
+  with the ``REPRO_TEST_STREAM_STALL_AFTER_SEALS`` hook set, is
+  **SIGKILL**ed mid-stream after its Nth seal, and an in-process ingestor
+  resumes from the manifest cursor; the gate requires exactly-once
+  delivery (final ``num_docs`` equals the feed, no doc dropped or doubled)
+  and the same byte-identity after compaction.
+
+    PYTHONPATH=src:. python benchmarks/streaming_bench.py --json BENCH_streaming.json
+    PYTHONPATH=src:. python benchmarks/streaming_bench.py --smoke --json BENCH_streaming.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import filecmp
+import glob
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+from repro.core.cooc import count_to_store
+from repro.data.corpus import synthetic_zipf_collection
+from repro.store import Store
+from repro.stream import (
+    FileTailSource,
+    StreamConfig,
+    StreamCursor,
+    StreamIngestor,
+    collection_to_feed,
+    write_feed,
+)
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+
+
+def _paced_writer(feed: str, c, rate: float) -> threading.Thread:
+    """Append ``c``'s documents to ``feed`` at ``rate`` docs/s, threaded."""
+
+    def run():
+        t0 = time.monotonic()
+        written = 0
+        while written < c.num_docs:
+            due = min(int((time.monotonic() - t0) * rate) + 1, c.num_docs)
+            if due > written:
+                write_feed(feed, (c.doc(d) for d in range(written, due)))
+                written = due
+            else:
+                time.sleep(min(0.005, 1.0 / rate))
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return t
+
+
+def _single_segment_bins(store_dir: str) -> dict[str, str]:
+    """{filename: path} of the deterministic arrays of a store's single
+    segment (everything but meta.json, whose created_unix stamp is wall
+    clock)."""
+    segs = sorted(glob.glob(os.path.join(store_dir, "seg-*")))
+    assert len(segs) == 1, segs
+    return {
+        os.path.basename(p): p
+        for p in sorted(glob.glob(os.path.join(segs[0], "*.bin")))
+    }
+
+
+def _stores_identical(a: str, b: str) -> bool:
+    fa, fb = _single_segment_bins(a), _single_segment_bins(b)
+    return fa.keys() == fb.keys() and all(
+        filecmp.cmp(fa[k], fb[k], shallow=False) for k in fa
+    )
+
+
+def _batch_reference(c, workdir: str, method: str, budget: int) -> str:
+    """One-shot batch build of ``c`` — the identity gates' ground truth."""
+    path = os.path.join(workdir, "batch_ref")
+    count_to_store(method, c, path, memory_budget_pairs=budget)
+    return path
+
+
+# ----------------------------------------------------------------- lag axis
+def run_lag_axis(c, workdir: str, *, rate: float, budget_ms: float,
+                 seal_docs: int, method: str, budget_pairs: int) -> dict:
+    feed = os.path.join(workdir, "feed_lag.txt")
+    store_path = os.path.join(workdir, "store_lag")
+    store = Store.create(store_path, c.vocab_size)
+    writer = _paced_writer(feed, c, rate)
+    ing = StreamIngestor(
+        store, FileTailSource(feed),
+        StreamConfig(
+            method=method, seal_docs=seal_docs,
+            max_visibility_lag_ms=budget_ms,
+            memory_budget_pairs=budget_pairs, max_docs=c.num_docs,
+        ),
+        source_id="bench-lag",
+    )
+    t0 = time.perf_counter()
+    summary = ing.run()
+    wall = time.perf_counter() - t0
+    writer.join(timeout=30)
+    assert summary["docs_this_run"] == c.num_docs
+    return {
+        "docs": c.num_docs,
+        "producer_rate_docs_s": rate,
+        "seal_docs": seal_docs,
+        "budget_ms": budget_ms,
+        "seals": summary["seals_this_run"],
+        "wall_s": round(wall, 3),
+        "lag_p50_ms": round(summary["visibility_lag_ms"]["p50"], 3),
+        "lag_p99_ms": round(summary["visibility_lag_ms"]["p99"], 3),
+        "lag_max_ms": round(summary["visibility_lag_ms"]["max"], 3),
+        "seal_p99_s": round(summary["seal_s"]["p99"], 4),
+        "store": store_path,
+    }
+
+
+# --------------------------------------------------------------- drain axis
+def run_drain_axis(c, workdir: str, *, budget_ms: float, seal_docs: int,
+                   method: str, budget_pairs: int) -> dict:
+    """Sustained throughput: the whole feed is already on disk; measure how
+    fast the tailer can commit it at the lag budget's seal cadence."""
+    feed = os.path.join(workdir, "feed_drain.txt")
+    collection_to_feed(feed, c)
+    store_path = os.path.join(workdir, "store_drain")
+    store = Store.create(store_path, c.vocab_size)
+    ing = StreamIngestor(
+        store, FileTailSource(feed),
+        StreamConfig(
+            method=method, seal_docs=seal_docs,
+            max_visibility_lag_ms=budget_ms,
+            memory_budget_pairs=budget_pairs, max_docs=c.num_docs,
+        ),
+        source_id="bench-drain",
+    )
+    t0 = time.perf_counter()
+    summary = ing.run()
+    wall = time.perf_counter() - t0
+    assert summary["docs_this_run"] == c.num_docs
+    return {
+        "docs": c.num_docs,
+        "seal_docs": seal_docs,
+        "seals": summary["seals_this_run"],
+        "wall_s": round(wall, 3),
+        "docs_per_hour": round(c.num_docs / wall * 3600),
+        "store": store_path,
+    }
+
+
+# -------------------------------------------------------------- resume axis
+def run_resume_axis(c, workdir: str, *, seal_docs: int, method: str,
+                    budget_pairs: int, batch_ref: str,
+                    stall_after_seals: int = 2) -> dict:
+    """SIGKILL a ``cooc_stream`` subprocess mid-stream, resume in-process,
+    and prove exactly-once delivery + byte-identity."""
+    feed = os.path.join(workdir, "feed_resume.txt")
+    collection_to_feed(feed, c)
+    store_path = os.path.join(workdir, "store_resume")
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_TEST_STREAM_STALL_AFTER_SEALS"] = str(stall_after_seals)
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.launch.cooc_stream",
+            "--feed", feed, "--store", store_path,
+            "--vocab", str(c.vocab_size), "--method", method,
+            "--seal-docs", str(seal_docs), "--source-id", "bench-resume",
+            "--idle-timeout-s", "60",
+        ],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+    )
+    # wait for the stall point: the hook parks the daemon right after its
+    # Nth seal's commit, so the cursor must reach N seals
+    deadline = time.monotonic() + 120
+    seals_seen = 0
+    while time.monotonic() < deadline:
+        if Store.exists(store_path):
+            cur = StreamCursor(Store.open(store_path), "bench-resume").load()
+            seals_seen = cur.seals
+            if seals_seen >= stall_after_seals:
+                break
+        if proc.poll() is not None:
+            raise RuntimeError("cooc_stream exited before the stall point")
+        time.sleep(0.05)
+    assert seals_seen >= stall_after_seals, "never reached the stall point"
+    proc.send_signal(signal.SIGKILL)
+    proc.wait(timeout=30)
+
+    store = Store.open(store_path)
+    before = StreamCursor(store, "bench-resume").load()
+    assert 0 < before.docs < c.num_docs  # genuinely mid-stream
+    ing = StreamIngestor(
+        store, FileTailSource(feed),
+        StreamConfig(
+            method=method, seal_docs=seal_docs,
+            memory_budget_pairs=budget_pairs,
+            max_docs=c.num_docs - before.docs,
+        ),
+        source_id="bench-resume",
+    )
+    t0 = time.perf_counter()
+    ing.run()
+    resume_wall = time.perf_counter() - t0
+    store.refresh()
+    after = StreamCursor(store, "bench-resume").load()
+    exactly_once = (after.docs == c.num_docs and store.num_docs == c.num_docs)
+    store.compact()
+    identical = _stores_identical(store_path, batch_ref)
+    return {
+        "docs": c.num_docs,
+        "seals_before_kill": before.seals,
+        "docs_before_kill": before.docs,
+        "docs_after_resume": after.docs,
+        "resume_wall_s": round(resume_wall, 3),
+        "exactly_once": exactly_once,
+        "byte_identical_after_compact": identical,
+    }
+
+
+# -------------------------------------------------------------------- suite
+def run_streaming(
+    json_path: str | None = None,
+    *,
+    smoke: bool = False,
+    docs: int | None = None,
+    vocab: int = 2_048,
+    mean_len: float = 12.0,
+    rate: float | None = None,
+    budget_ms: float = 2_000.0,
+    seal_docs: int | None = None,
+    method: str = "list-scan",
+    budget_pairs: int = 1 << 20,
+    seed: int = 0,
+    workdir: str | None = None,
+) -> dict:
+    docs = docs if docs is not None else (600 if smoke else 8_000)
+    rate = rate if rate is not None else (2_000.0 if smoke else 4_000.0)
+    seal_docs = seal_docs if seal_docs is not None else (64 if smoke else 512)
+    workdir = workdir or os.path.join(
+        os.getcwd(), f".streaming_bench_{os.getpid()}"
+    )
+    shutil.rmtree(workdir, ignore_errors=True)
+    os.makedirs(workdir)
+    try:
+        c = synthetic_zipf_collection(docs, vocab=vocab, mean_len=mean_len,
+                                      seed=seed)
+        batch_ref = _batch_reference(c, workdir, method, budget_pairs)
+
+        lag = run_lag_axis(
+            c, workdir, rate=rate, budget_ms=budget_ms, seal_docs=seal_docs,
+            method=method, budget_pairs=budget_pairs,
+        )
+        print(f"[lag] {lag['seals']} seals, p50 {lag['lag_p50_ms']}ms, "
+              f"p99 {lag['lag_p99_ms']}ms (budget {budget_ms}ms)")
+
+        # identity: the lag axis's streamed store, fully compacted, vs the
+        # one-shot batch build
+        streamed = Store.open(lag.pop("store"))
+        streamed.compact()
+        lag["byte_identical_after_compact"] = _stores_identical(
+            streamed.path, batch_ref
+        )
+        print(f"[identity] streamed == batch after compaction: "
+              f"{lag['byte_identical_after_compact']}")
+
+        drain = run_drain_axis(
+            c, workdir, budget_ms=budget_ms, seal_docs=seal_docs,
+            method=method, budget_pairs=budget_pairs,
+        )
+        drain.pop("store")
+        print(f"[drain] {drain['docs_per_hour']} docs/hour "
+              f"({drain['seals']} seals of {seal_docs})")
+
+        resume = run_resume_axis(
+            c, workdir, seal_docs=seal_docs, method=method,
+            budget_pairs=budget_pairs, batch_ref=batch_ref,
+        )
+        print(f"[resume] killed after {resume['seals_before_kill']} seals "
+              f"({resume['docs_before_kill']} docs); exactly_once="
+              f"{resume['exactly_once']} identical="
+              f"{resume['byte_identical_after_compact']}")
+
+        gate = {
+            "lag_budget_ms": budget_ms,
+            "lag_p99_ms": lag["lag_p99_ms"],
+            "lag_ok": lag["lag_p99_ms"] <= budget_ms,
+            "identity_ok": lag["byte_identical_after_compact"],
+            "resume_ok": (resume["exactly_once"]
+                          and resume["byte_identical_after_compact"]),
+        }
+        out = {
+            "suite": "streaming",
+            "config": {
+                "docs": docs, "vocab": vocab, "mean_len": mean_len,
+                "rate_docs_s": rate, "budget_ms": budget_ms,
+                "seal_docs": seal_docs, "method": method,
+                "budget_pairs": budget_pairs, "seed": seed, "smoke": smoke,
+            },
+            "lag": lag,
+            "drain": drain,
+            "resume": resume,
+            "gate": gate,
+        }
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(out, f, indent=2)
+            print(f"[json] -> {json_path}")
+        failures = [k for k in ("lag_ok", "identity_ok", "resume_ok")
+                    if not gate[k]]
+        if failures:
+            raise SystemExit(f"streaming gates failed: {failures}")
+        return out
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus / fast settings for CI")
+    ap.add_argument("--docs", type=int, default=None)
+    ap.add_argument("--vocab", type=int, default=2_048)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="producer pace for the lag axis, docs/s")
+    ap.add_argument("--budget-ms", type=float, default=2_000.0,
+                    help="visibility-lag budget the p99 gate enforces")
+    ap.add_argument("--seal-docs", type=int, default=None)
+    ap.add_argument("--method", default="list-scan")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run_streaming(
+        args.json, smoke=args.smoke, docs=args.docs, vocab=args.vocab,
+        rate=args.rate, budget_ms=args.budget_ms, seal_docs=args.seal_docs,
+        method=args.method, seed=args.seed,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,15 @@ gains a ``compaction`` key with the merge result, and multi-worker stats
 include the ``storage`` codec counters (blocks decoded, block-cache hit
 rate, bloom negatives).
 
+``--follow FEED`` tails a feed file (repro.stream: one document per line
+of space-separated term IDs) into the store *while the workload runs*,
+sealing micro-segments under the ``--max-lag-ms`` visibility budget, and
+``--refresh-interval-ms`` makes idle workers refresh the manifest
+periodically so a server with no traffic still surfaces each seal — the
+stats JSON gains a ``stream`` key (cursor position, visibility-lag
+percentiles) and multi-worker stats a ``freshness`` block (manifest
+generation, segment census, seconds since last append).
+
 ``--kernel`` picks the score-and-select backend for either topology:
 ``numpy`` (jitted reference) or ``pallas`` (fused top-k gather kernel;
 interpreter mode off-TPU). Results are bit-identical between the two.
@@ -183,7 +192,7 @@ def _serve_multiprocess(
     store_path, draw, queries, batch, topk, score,
     workers, clients, batch_window_ms, kernel, seed,
     routing=False, cache_rows=4096, metrics_interval=0.0,
-    keep_metrics=False, compact_store=None,
+    keep_metrics=False, compact_store=None, refresh_interval_ms=0.0,
 ) -> dict:
     """Two phases (all-clients top-k, then all-clients pair lookups),
     barrier-aligned so each workload's QPS is measured against its own
@@ -204,6 +213,7 @@ def _serve_multiprocess(
         store_path, workers=workers, batch_window_ms=batch_window_ms,
         kernel=kernel, routing=routing, cache_rows=cache_rows,
         stats_interval_s=metrics_interval,
+        refresh_interval_ms=refresh_interval_ms,
     ).start()
     compact_handle = _start_compaction(compact_store) if compact_store else None
 
@@ -323,6 +333,9 @@ def serve(
     store_format: str | None = None,
     build_segments: int = 1,
     compact: bool = False,
+    follow: str | None = None,
+    refresh_interval_ms: float = 0.0,
+    max_lag_ms: float = 2_000.0,
 ) -> dict:
     """Build/open a store and replay a Zipf workload; returns the stats dict
     (and writes it as JSON to ``json_out`` if given).
@@ -331,7 +344,13 @@ def serve(
     a freshly built store; ``build_segments`` shards the corpus into that
     many appended segments; ``compact`` merges them in a background process
     **while the workload runs** (the serving workers pick up the swap via
-    refresh()) and reports the result under ``"compaction"``."""
+    refresh()) and reports the result under ``"compaction"``.
+
+    ``follow`` tails a feed file (repro.stream format: one document per
+    line of space-separated term IDs) into the store **while serving**,
+    sealing micro-segments under a ``max_lag_ms`` visibility budget —
+    pair ``--workers N`` with ``refresh_interval_ms`` so even idle workers
+    see each seal; the ingest summary lands under ``"stream"``."""
     telemetry = bool(trace_out) or metrics_interval > 0
     reg = obs.configure(enabled=True) if telemetry else obs.get_registry()
     segment_version = (
@@ -342,6 +361,20 @@ def serve(
         segment_version=segment_version, build_segments=build_segments,
     )
     draw = _zipf_sampler(store, seed)
+
+    ingestor = None
+    if follow:
+        from repro.stream import FileTailSource, StreamConfig, StreamIngestor
+
+        # tail the feed into the serving store while the workload runs;
+        # the cursor lives in the store manifest, so re-running with the
+        # same feed resumes instead of re-ingesting
+        ingestor = StreamIngestor(
+            store,
+            FileTailSource(follow),
+            StreamConfig(max_visibility_lag_ms=max_lag_ms),
+            source_id=os.path.abspath(follow),
+        ).start()
 
     if workers <= 0:
         compact_handle = _start_compaction(store) if compact else None
@@ -371,7 +404,12 @@ def serve(
             routing=routing, cache_rows=cache_rows,
             metrics_interval=metrics_interval, keep_metrics=telemetry,
             compact_store=store if compact else None,
+            refresh_interval_ms=refresh_interval_ms,
         )
+
+    if ingestor is not None:
+        ingestor.stop()
+        served["stream"] = ingestor.summary()
 
     store.refresh()  # a background compaction may have swapped segments
     stats = {
@@ -469,6 +507,22 @@ def main():
         help="merge segments in a background process while the workload "
              "runs; serving picks the swap up live via refresh()",
     )
+    ap.add_argument(
+        "--follow", default=None, metavar="FEED",
+        help="tail this feed file (one doc per line of term IDs) into the "
+             "store while serving; resumes from the manifest stream cursor",
+    )
+    ap.add_argument(
+        "--refresh-interval-ms", type=float, default=0.0,
+        help="serving workers refresh the manifest this often even with no "
+             "traffic, so an idle server still sees streamed segments "
+             "(0 = refresh only between micro-batches)",
+    )
+    ap.add_argument(
+        "--max-lag-ms", type=float, default=2_000.0,
+        help="visibility-lag budget for --follow: every tailed doc should "
+             "be queryable within this long of arriving",
+    )
     args = ap.parse_args()
     serve(
         args.docs,
@@ -492,6 +546,9 @@ def main():
         store_format=args.store_format,
         build_segments=args.build_segments,
         compact=args.compact,
+        follow=args.follow,
+        refresh_interval_ms=args.refresh_interval_ms,
+        max_lag_ms=args.max_lag_ms,
     )
 
 

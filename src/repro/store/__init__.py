@@ -5,7 +5,8 @@ producer) → ``codec``/``bloom`` (block-compressed columns, blocked bloom
 filters) → ``csr_store`` (immutable segments: v1 raw mmap or v2
 compressed, one ``open_segment`` dispatch) → ``segments`` (LSM manifest:
 incremental append, shard ingest, size-tiered foreground/background
-compaction) → ``requests`` (typed query requests, QueryPlanner
+compaction; ``compaction`` adds the tier-pressure daemon that keeps a
+continuously growing store converged) → ``requests`` (typed query requests, QueryPlanner
 routing/coalescing, one execution path) → ``query`` (batched
 pair/top-k/PMI engine, numpy or Pallas kernel) → ``serving``
 (multi-process shared-mmap workers with cross-client micro-batching,
@@ -16,6 +17,7 @@ on-disk layout, and docs/serving.md for the query API + wire protocol.
 
 from repro.store.bloom import BloomFilter
 from repro.store.builder import SpillSink, merge_row_streams
+from repro.store.compaction import CompactionDaemon, CompactionPolicy
 from repro.store.codec import BlockCache, CompressedColumn, write_column
 from repro.store.csr_store import (
     CompressedSegment,
@@ -55,6 +57,8 @@ __all__ = [
     "QueryEngine",
     "Store",
     "CompactionHandle",
+    "CompactionDaemon",
+    "CompactionPolicy",
     "TopKRequest",
     "PairCountsRequest",
     "NeighboursRequest",

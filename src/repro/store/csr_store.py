@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 
 import numpy as np
 
@@ -181,6 +182,10 @@ def _write_segment_files(
         "num_docs": int(num_docs),
         "total_count": total,
         "source": source,
+        # wall-clock append time: Store.freshness() reports the newest
+        # segment's age as seconds-since-last-append (v1→v2 transcode
+        # preserves it — compression is not an append)
+        "created_unix": time.time(),
     }
     with open(os.path.join(out_dir, META_NAME), "w") as f:
         json.dump(meta, f, indent=2)

@@ -258,6 +258,45 @@ class Store:
             out += s.df
         return out
 
+    def freshness(self) -> dict:
+        """How fresh this handle's view of the store is: the manifest
+        ``generation``, the segment count split by on-disk format version,
+        and the unix time of the newest segment append (``None`` when the
+        store is empty or predates the ``created_unix`` meta field).
+        Serving workers publish this with their stats snapshots so
+        ``CoocServer.stats()["freshness"]`` tracks streamed appends live.
+
+        Reads only the tiny per-segment ``meta.json``s, never the arrays; a
+        segment a concurrent compaction unlinked mid-walk triggers a
+        refresh-and-retry like the ``segments`` property."""
+        for _ in range(8):
+            by_version: dict[str, int] = {}
+            last: float | None = None
+            try:
+                for name in self.manifest["segments"]:
+                    with open(
+                        os.path.join(self.path, name, "meta.json")
+                    ) as f:
+                        meta = json.load(f)
+                    v = f"v{int(meta.get('format_version', 1))}"
+                    by_version[v] = by_version.get(v, 0) + 1
+                    created = meta.get("created_unix")
+                    if created is not None:
+                        last = created if last is None else max(last, created)
+            except FileNotFoundError:
+                if not self.refresh():
+                    raise
+                continue
+            return {
+                "generation": int(self.manifest.get("generation", 0)),
+                "segments": len(self.manifest["segments"]),
+                "segments_by_version": by_version,
+                "last_append_unix": last,
+            }
+        raise RuntimeError(
+            f"segment set of {self.path} kept changing underneath freshness()"
+        )
+
     # --------------------------------------------------------- writing
     def _reserve_segment(self) -> tuple[str, str]:
         """Allocate the next segment name with a committed ``next_seg_id``
@@ -304,6 +343,7 @@ class Store:
         num_docs: int = 0,
         source: str = "rows",
         single_commit: bool = False,
+        extra_mutate=None,
     ):
         """Write a merged (primary, secondaries, counts) row stream — strictly
         ascending primaries, unique pairs — as a new segment. The single
@@ -315,7 +355,15 @@ class Store:
         appends it — instead of the default reserve-then-append pair of
         commits. The parallel-ingest finalizer uses this so a crash leaves
         either no trace (an unreferenced pending dir) or the fully
-        committed segment, never a reserved-but-absent name."""
+        committed segment, never a reserved-but-absent name.
+
+        ``extra_mutate`` (optional) runs against the manifest inside the
+        same locked commit that appends the segment, *before* the append —
+        so an unrelated manifest key (e.g. a stream cursor) advances
+        atomically with the segment becoming visible. It may raise to abort
+        the commit: with ``single_commit`` the written segment is then an
+        unreferenced pending directory (crash-equivalent, cleaned up on the
+        next attempt), never a committed one."""
         if single_commit:
             tmp_dir = os.path.join(
                 self.path, f".pending-{os.getpid()}-{id(rows):x}"
@@ -328,6 +376,8 @@ class Store:
             holder: dict = {}
 
             def mut(m):
+                if extra_mutate is not None:
+                    extra_mutate(m)
                 name = f"seg-{m['next_seg_id']:05d}"
                 m["next_seg_id"] += 1
                 os.replace(tmp_dir, os.path.join(self.path, name))
@@ -337,11 +387,17 @@ class Store:
             self._commit(mut)
             return self._segment(holder["name"])
         name, seg_dir = self._reserve_segment()
+
+        def mut_append(m):
+            if extra_mutate is not None:
+                extra_mutate(m)
+            m["segments"].append(name)
+
         write_segment(
             seg_dir, rows, self.vocab_size, df=df, num_docs=num_docs,
             source=source, version=self.segment_version,
         )
-        self._commit(lambda m: m["segments"].append(name))
+        self._commit(mut_append)
         return self._segment(name)
 
     def append_collection(

@@ -20,7 +20,9 @@ kernel launches over concurrent traffic:
   physical copy, so N workers serve a 100 GB store with ~one store's worth
   of resident pages. Workers ``Store.refresh()`` between micro-batches, so
   a manifest commit (append/ingest/compact) in the parent becomes visible
-  to in-flight serving traffic without a restart.
+  to in-flight serving traffic without a restart; ``refresh_interval_ms``
+  adds a periodic idle refresh, so a server with *no* traffic still
+  follows a stream daemon's commits (see repro.stream).
 * **Micro-batching with a latency budget** — a worker takes the first
   request off its queue, then keeps draining for at most ``batch_window_ms``
   (or until ``max_batch`` requests), coalesces compatible requests — same
@@ -110,6 +112,7 @@ class ServingConfig:
     cache_rows: int = 4096            # per-worker LRU capacity
     routing: bool = False             # hot-term routing: per-worker queues
     stats_interval_s: float = 0.0     # 0 = snapshot only at worker exit
+    refresh_interval_ms: float = 0.0  # 0 = refresh only between micro-batches
 
     def __post_init__(self):
         if self.workers < 1:
@@ -120,6 +123,8 @@ class ServingConfig:
             raise ValueError("max_batch must be >= 1")
         if self.stats_interval_s < 0:
             raise ValueError("stats_interval_s must be >= 0")
+        if self.refresh_interval_ms < 0:
+            raise ValueError("refresh_interval_ms must be >= 0")
 
 
 # ---------------------------------------------------------------------------
@@ -171,7 +176,14 @@ def _worker_payload(stats: dict, engine, registry) -> dict:
     out.update(engine.stats)  # cache_hits / cache_misses
     hits, misses = out["cache_hits"], out["cache_misses"]
     out["cache_hit_rate"] = round(hits / max(hits + misses, 1), 4)
-    return {"stats": out, "metrics": registry.snapshot()}
+    return {
+        "stats": out,
+        "metrics": registry.snapshot(),
+        # manifest generation / segment census as this worker sees it; the
+        # parent keeps the highest-generation view (a mid-commit sibling may
+        # briefly lag by one refresh)
+        "freshness": engine.store.freshness(),
+    }
 
 
 def _worker_main(
@@ -213,14 +225,30 @@ def _worker_main(
     h_bsz = reg.histogram("serving/batch_requests")
     window_s = cfg.batch_window_ms / 1e3
     interval = cfg.stats_interval_s
-    last_pub = time.monotonic()
+    refresh_s = cfg.refresh_interval_ms / 1e3
+    # idle wake-up: the shorter of the two periodic duties (stats snapshot,
+    # manifest refresh); None blocks forever when neither is configured —
+    # an idle worker then only refreshes when traffic arrives, as before
+    idle_duties = [t for t in (interval, refresh_s) if t > 0]
+    idle_timeout = min(idle_duties) if idle_duties else None
+    last_pub = last_refresh = time.monotonic()
     stop = False
     while not stop:
         try:
-            req = request_q.get(timeout=interval or None)
-        except queue.Empty:  # idle: keep the parent's live view fresh
-            stats_q.put(("snap", worker_id, _worker_payload(stats, engine, reg)))
-            last_pub = time.monotonic()
+            req = request_q.get(timeout=idle_timeout)
+        except queue.Empty:  # idle: periodic duties, then wait again
+            now = time.monotonic()
+            if refresh_s and now - last_refresh >= refresh_s:
+                # an idle server still follows the manifest: segments a
+                # stream daemon committed become queryable without traffic
+                if engine.store.refresh():
+                    stats["store_refreshes"] += 1
+                last_refresh = now
+            if interval and now - last_pub >= interval:
+                stats_q.put(
+                    ("snap", worker_id, _worker_payload(stats, engine, reg))
+                )
+                last_pub = now
             continue
         if req is _STOP:
             break
@@ -241,6 +269,7 @@ def _worker_main(
             batch.append(nxt)
         if engine.store.refresh():  # cross-process append/compact visibility
             stats["store_refreshes"] += 1
+        last_refresh = time.monotonic()
         # queue wait = batch start minus client submit; unix time is the one
         # clock both processes share (perf_counter epochs differ per process)
         t_start = time.time()
@@ -529,6 +558,7 @@ class CoocServer:
         cache_rows: int = 4096,
         routing: bool = False,
         stats_interval_s: float = 0.0,
+        refresh_interval_ms: float = 0.0,
     ):
         from repro.store.segments import Store
 
@@ -551,6 +581,7 @@ class CoocServer:
             cache_rows=cache_rows,
             routing=self.planner.routing,
             stats_interval_s=stats_interval_s,
+            refresh_interval_ms=refresh_interval_ms,
         )
         self._stats_final: dict = {}
         self._worker_last: dict[int, dict] = {}   # freshest payload per worker
@@ -641,7 +672,10 @@ class CoocServer:
 
         Keys of note: ``server_timing`` (queue-wait / execute /
         request-latency p50/p95/p99 in ms, from the merged histograms),
-        ``workers_lost`` (workers that never sent a final snapshot),
+        ``freshness`` (manifest generation, segment count per format
+        version, seconds since the newest segment was created — the most
+        advanced worker view wins, so it tracks a stream daemon's commits
+        live), ``workers_lost`` (workers that never sent a final snapshot),
         ``storage`` (codec traffic on v2 compressed stores: blocks decoded,
         block-cache hit rate, bloom negative rate — zeros on raw v1),
         ``metrics`` (the raw merged snapshot — feed it to
@@ -690,6 +724,23 @@ class CoocServer:
                     "mean": round(h.mean * 1e3, 3),
                     "count": h.count,
                 }
+        # freshness: the most advanced manifest view any worker has reported
+        # (highest generation wins — a sibling mid-refresh may lag by one),
+        # with staleness derived from the newest segment's creation stamp
+        fresh_views = [
+            p["freshness"] for p in self._worker_last.values()
+            if p.get("freshness")
+        ]
+        freshness = {}
+        if fresh_views:
+            freshness = dict(
+                max(fresh_views, key=lambda f: f.get("generation", 0))
+            )
+            last_append = freshness.get("last_append_unix")
+            freshness["seconds_since_last_append"] = (
+                round(max(time.time() - last_append, 0.0), 3)
+                if last_append else None
+            )
         # storage-engine counters (v2 compressed segments; zeros on raw v1
         # stores): codec traffic plus derived block-cache / bloom hit rates
         ctr = metrics.get("counters", {})
@@ -714,6 +765,7 @@ class CoocServer:
             **agg,
             "workers_lost": workers_lost,
             "server_timing": timing,
+            "freshness": freshness,
             "storage": storage,
             "metrics": metrics,
             "per_worker": [per_worker[w] for w in sorted(per_worker)],

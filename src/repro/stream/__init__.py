@@ -1,0 +1,35 @@
+"""Continuous-ingest streaming: micro-segment tailer with bounded
+visibility lag (ISSUE 9).
+
+The batch pipeline builds a store once; this package keeps one *current*:
+a :class:`StreamIngestor` tails a document source, seals micro-segments on
+a size-or-age trigger so every document is queryable within a configured
+lag budget, and records its position in a manifest-resident
+:class:`StreamCursor` advanced atomically with each segment commit
+(exactly-once across crashes). The companion
+:class:`~repro.store.compaction.CompactionDaemon` folds the resulting
+micro-segment tail back down so read amplification stays bounded.
+
+See docs/streaming.md for the lag contract and crash-resume guarantees.
+"""
+
+from repro.stream.cursor import CursorState, StreamCursor, StreamCursorConflict
+from repro.stream.daemon import StreamConfig, StreamIngestor
+from repro.stream.source import (
+    FileTailSource,
+    QueueSource,
+    collection_to_feed,
+    write_feed,
+)
+
+__all__ = [
+    "CursorState",
+    "StreamCursor",
+    "StreamCursorConflict",
+    "StreamConfig",
+    "StreamIngestor",
+    "FileTailSource",
+    "QueueSource",
+    "collection_to_feed",
+    "write_feed",
+]

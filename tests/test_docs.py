@@ -15,7 +15,7 @@ LINKED_PAGES = DOC_PAGES + [os.path.join(ROOT, "README.md")]
 
 REQUIRED_PAGES = {
     "architecture.md", "formats.md", "methods.md", "serving.md",
-    "observability.md",
+    "observability.md", "streaming.md",
 }
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

@@ -1,0 +1,497 @@
+"""Continuous-ingest streaming subsystem (repro.stream): sources, the
+manifest-resident exactly-once cursor, the micro-segment ingestor's seal
+triggers, byte-identity of streamed stores against one-shot batch builds
+(100+ micro-segments, across every query type), crash-resume (in-process
+and SIGKILL'd subprocess), the tier-pressure CompactionDaemon, and the
+serving layer's idle refresh + freshness stats."""
+
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cooc import count_to_store
+from repro.data.corpus import synthetic_zipf_collection
+from repro.store import (
+    CompactionDaemon,
+    CompactionPolicy,
+    CoocServer,
+    QueryEngine,
+    Store,
+)
+from repro.stream import (
+    CursorState,
+    FileTailSource,
+    QueueSource,
+    StreamConfig,
+    StreamCursor,
+    StreamCursorConflict,
+    StreamIngestor,
+    collection_to_feed,
+    write_feed,
+)
+
+VOCAB = 160
+SRC_DIR = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def corpus(docs=200, seed=0, mean_len=10):
+    return synthetic_zipf_collection(docs, vocab=VOCAB, mean_len=mean_len,
+                                     seed=seed)
+
+
+def batch_store(c, path, method="list-scan"):
+    store, _ = count_to_store(method, c, path)
+    return store
+
+
+def drain(store, c, *, seal_docs=16, source_id="q", **cfg_kwargs):
+    """Stream a whole collection through a QueueSource into ``store``."""
+    src = QueueSource()
+    src.push_collection(c)
+    src.close()
+    ing = StreamIngestor(
+        store, src, StreamConfig(seal_docs=seal_docs, **cfg_kwargs),
+        source_id=source_id,
+    )
+    return ing.run()
+
+
+# ---------------------------------------------------------------- sources
+class TestSources:
+    def test_queue_source_offsets_and_exhaustion(self):
+        src = QueueSource()
+        src.push([3, 1, 2])
+        src.push([])
+        assert not src.exhausted
+        got = src.poll()
+        assert [off for off, _ in got] == [1, 2]
+        assert got[1][1].size == 0
+        src.close()
+        assert src.exhausted
+        with pytest.raises(RuntimeError):
+            src.push([1])
+        src.seek(2)  # current head is fine
+        with pytest.raises(ValueError):
+            src.seek(0)  # in-memory source cannot rewind
+
+    def test_queue_source_poll_cap(self):
+        src = QueueSource()
+        for i in range(5):
+            src.push([i])
+        assert len(src.poll(2)) == 2
+        assert len(src.poll()) == 3
+
+    def test_file_tail_roundtrip_and_blank_lines(self, tmp_path):
+        feed = str(tmp_path / "feed.txt")
+        write_feed(feed, [[5, 1, 3], [], [7]])
+        src = FileTailSource(feed)
+        got = src.poll()
+        assert len(got) == 3
+        np.testing.assert_array_equal(got[0][1], [5, 1, 3])
+        assert got[1][1].size == 0  # blank line is an (empty) document
+        np.testing.assert_array_equal(got[2][1], [7])
+        # offsets are byte positions: seeking to one replays the tail
+        src2 = FileTailSource(feed, start_offset=got[0][0])
+        assert len(src2.poll()) == 2
+
+    def test_file_tail_partial_line_not_consumed(self, tmp_path):
+        feed = str(tmp_path / "feed.txt")
+        with open(feed, "w") as f:
+            f.write("1 2\n3 4")  # second line has no newline yet
+        src = FileTailSource(feed)
+        got = src.poll()
+        assert len(got) == 1  # the torn line stays unread
+        with open(feed, "a") as f:
+            f.write(" 5\n")
+        got2 = src.poll()
+        assert len(got2) == 1
+        np.testing.assert_array_equal(got2[0][1], [3, 4, 5])
+
+    def test_file_tail_missing_file_is_empty(self, tmp_path):
+        src = FileTailSource(str(tmp_path / "nope.txt"))
+        assert src.poll() == []
+
+    def test_collection_to_feed_roundtrip(self, tmp_path):
+        c = corpus(40)
+        feed = str(tmp_path / "feed.txt")
+        collection_to_feed(feed, c)
+        got = FileTailSource(feed).poll()
+        assert len(got) == c.num_docs
+        for d, (_, terms) in enumerate(got):
+            np.testing.assert_array_equal(terms, c.doc(d))
+
+
+# ----------------------------------------------------------------- cursor
+class TestCursor:
+    def test_load_empty_then_roundtrip(self, tmp_path):
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        cur = StreamCursor(store, "feed-a")
+        assert cur.load() == CursorState()
+        c = corpus(30)
+        drain(store, c, source_id="feed-a", seal_docs=10)
+        state = cur.load()
+        assert state == CursorState(offset=30, docs=30, seals=3)
+
+    def test_fencing_aborts_commit(self, tmp_path):
+        """A stale cursor must abort the whole seal commit: no segment
+        appears and the manifest cursor is untouched — the two-daemons-one-
+        source race cannot double-count."""
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        c = corpus(20)
+        drain(store, c, source_id="x", seal_docs=20)
+        cur = StreamCursor(store, "x")
+        stale = CursorState(offset=0, docs=0, seals=0)  # pre-drain view
+        segs_before = list(store.segment_names)
+        with pytest.raises(StreamCursorConflict):
+            store.add_segment_from_rows(
+                iter([(0, np.array([1], np.int32), np.array([1], np.int64))]),
+                num_docs=1,
+                single_commit=True,
+                extra_mutate=cur.advance_mutation(stale, 99, 1),
+            )
+        store.refresh()
+        assert store.segment_names == segs_before
+        assert cur.load() == CursorState(offset=20, docs=20, seals=1)
+
+    def test_cursor_survives_compaction(self, tmp_path):
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        drain(store, corpus(60), source_id="x", seal_docs=10)
+        before = StreamCursor(store, "x").load()
+        store.compact()
+        assert StreamCursor(store, "x").load() == before
+
+    def test_distinct_sources_independent(self, tmp_path):
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        drain(store, corpus(20, seed=1), source_id="a", seal_docs=20)
+        drain(store, corpus(30, seed=2), source_id="b", seal_docs=30)
+        assert StreamCursor(store, "a").load().docs == 20
+        assert StreamCursor(store, "b").load().docs == 30
+
+
+# --------------------------------------------------------------- ingestor
+class TestIngestor:
+    def test_seal_by_size(self, tmp_path):
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        summary = drain(store, corpus(100), seal_docs=16)
+        assert summary["seals_this_run"] == 7  # ceil(100/16)
+        store.refresh()
+        assert len(store.segment_names) == 7
+        assert store.num_docs == 100
+
+    def test_seal_by_age(self, tmp_path):
+        """A trickle that never reaches seal_docs still commits within the
+        age trigger — the visibility-lag half of the contract."""
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        src = QueueSource()
+        ing = StreamIngestor(
+            store, src,
+            StreamConfig(seal_docs=1_000, max_visibility_lag_ms=200.0,
+                         poll_interval_ms=5.0),
+            source_id="trickle",
+        ).start()
+        try:
+            src.push([1, 2, 3])
+            deadline = time.monotonic() + 5
+            while time.monotonic() < deadline:
+                store.refresh()
+                if store.num_docs:
+                    break
+                time.sleep(0.02)
+            assert store.num_docs == 1  # sealed by age, far below seal_docs
+        finally:
+            src.close()
+            ing.stop()
+
+    def test_visibility_lag_recorded(self, tmp_path):
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        summary = drain(store, corpus(50), seal_docs=10)
+        lag = summary["visibility_lag_ms"]
+        assert 0 < lag["p50"] <= lag["max"]
+        assert summary["seal_s"]["p50"] > 0
+
+    def test_empty_docs_count(self, tmp_path):
+        """Blank feed lines are documents: num_docs parity with a batch
+        build requires committing them."""
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        src = QueueSource()
+        src.push([1, 2])
+        src.push([])
+        src.push([3])
+        src.close()
+        StreamIngestor(store, src, StreamConfig(seal_docs=2),
+                       source_id="e").run()
+        store.refresh()
+        assert store.num_docs == 3
+
+    def test_out_of_vocab_raises(self, tmp_path):
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        src = QueueSource()
+        src.push([VOCAB])  # one past the end
+        src.close()
+        ing = StreamIngestor(store, src, StreamConfig(seal_docs=1),
+                             source_id="bad")
+        with pytest.raises(ValueError, match="term IDs outside"):
+            ing.run()
+
+    def test_inprocess_resume_exactly_once(self, tmp_path):
+        """Stop mid-feed (max_docs), restart with a fresh ingestor + source:
+        the cursor resumes after the committed prefix, nothing is double-
+        counted."""
+        c = corpus(90)
+        feed = str(tmp_path / "feed.txt")
+        collection_to_feed(feed, c)
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        StreamIngestor(
+            store, FileTailSource(feed),
+            StreamConfig(seal_docs=20, max_docs=40), source_id="f",
+        ).run()
+        assert StreamCursor(store, "f").load().docs == 40
+        StreamIngestor(
+            store, FileTailSource(feed),
+            StreamConfig(seal_docs=20, max_docs=50), source_id="f",
+        ).run()
+        store.refresh()
+        assert store.num_docs == c.num_docs
+        ref = batch_store(c, str(tmp_path / "batch"))
+        np.testing.assert_array_equal(store.dense(), ref.dense())
+        np.testing.assert_array_equal(store.df(), ref.df())
+
+
+# --------------------------------------------- identity across micro-segments
+class TestMicroSegmentIdentity:
+    def test_100_microsegments_query_identity(self, tmp_path):
+        """A store of 100+ micro-segments must answer every query type
+        byte-identically to the single-segment batch build of the same
+        collection."""
+        c = corpus(220, mean_len=8)
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        summary = drain(store, c, seal_docs=2)
+        assert summary["seals_this_run"] == 110
+        store.refresh()
+        assert len(store.segment_names) == 110
+        ref = batch_store(c, str(tmp_path / "batch"))
+
+        e_many = QueryEngine(store)
+        e_one = QueryEngine(ref)
+        rng = np.random.default_rng(0)
+        terms = rng.integers(0, VOCAB, size=16)
+        for score in ("count", "pmi"):
+            ids_a, sc_a = e_many.topk(terms, k=8, score=score)
+            ids_b, sc_b = e_one.topk(terms, k=8, score=score)
+            np.testing.assert_array_equal(ids_a, ids_b)
+            np.testing.assert_array_equal(sc_a, sc_b)
+        pairs = rng.integers(0, VOCAB, size=(64, 2))
+        np.testing.assert_array_equal(
+            store.pair_counts(pairs), ref.pair_counts(pairs)
+        )
+        for t in rng.integers(0, VOCAB, size=8):
+            ids_a, cnt_a = store.neighbours(int(t))
+            ids_b, cnt_b = ref.neighbours(int(t))
+            np.testing.assert_array_equal(ids_a, ids_b)
+            np.testing.assert_array_equal(cnt_a, cnt_b)
+
+    def test_compacted_stream_byte_identical_to_batch(self, tmp_path):
+        import filecmp
+        import glob as g
+
+        c = corpus(150)
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        drain(store, c, seal_docs=7)
+        store.refresh()
+        store.compact()
+        ref = batch_store(c, str(tmp_path / "batch"))
+        (seg_a,) = g.glob(str(tmp_path / "s" / "seg-*"))
+        (seg_b,) = g.glob(str(tmp_path / "batch" / "seg-*"))
+        bins_a = sorted(os.path.basename(p)
+                        for p in g.glob(os.path.join(seg_a, "*.bin")))
+        bins_b = sorted(os.path.basename(p)
+                        for p in g.glob(os.path.join(seg_b, "*.bin")))
+        assert bins_a == bins_b and bins_a
+        for name in bins_a:
+            assert filecmp.cmp(os.path.join(seg_a, name),
+                               os.path.join(seg_b, name), shallow=False), name
+
+
+# ------------------------------------------------------- compaction daemon
+class TestCompactionDaemon:
+    def test_policy_validation(self):
+        with pytest.raises(ValueError):
+            CompactionPolicy(fanout=1)
+        with pytest.raises(ValueError):
+            CompactionPolicy(tier_ratio=0.5)
+        with pytest.raises(ValueError):
+            CompactionPolicy(backoff_s=0)
+
+    def test_converges_to_tier_invariant(self, tmp_path):
+        c = corpus(200)
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        drain(store, c, seal_docs=2)
+        store.refresh()
+        assert len(store.segment_names) == 100
+        dense_before = store.dense()
+        daemon = CompactionDaemon(store, CompactionPolicy(fanout=4),
+                                  inline=True)
+        rounds = daemon.until_converged()
+        assert rounds >= 1
+        assert daemon.plan() == []  # invariant holds
+        assert len(store.segment_names) < 100
+        np.testing.assert_array_equal(store.dense(), dense_before)
+
+    def test_run_once_noop_when_converged(self, tmp_path):
+        c = corpus(40)
+        store = batch_store(c, str(tmp_path / "s"))
+        daemon = CompactionDaemon(store, inline=True)
+        assert daemon.run_once() == 0
+        assert daemon.summary()["merges"] == 0
+
+    def test_background_thread_compacts_during_ingest(self, tmp_path):
+        """The daemon thread folds the tail down while the ingestor keeps
+        sealing; queries stay identical throughout."""
+        c = corpus(160)
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        daemon = CompactionDaemon(
+            store, CompactionPolicy(fanout=4, backoff_s=0.01), inline=True
+        ).start()
+        try:
+            drain(store, c, seal_docs=4)
+        finally:
+            daemon.stop()
+        store.refresh()
+        daemon.until_converged()
+        assert len(store.segment_names) < 40
+        ref = batch_store(c, str(tmp_path / "batch"))
+        np.testing.assert_array_equal(store.dense(), ref.dense())
+        assert StreamCursor(store, "q").load().docs == 160
+
+
+# -------------------------------------------------------------- freshness
+class TestFreshness:
+    def test_store_freshness(self, tmp_path):
+        c = corpus(50)
+        store = batch_store(c, str(tmp_path / "s"))
+        f = store.freshness()
+        assert f["segments"] == 1
+        assert f["segments_by_version"] == {"v1": 1}
+        assert f["generation"] >= 1
+        assert f["last_append_unix"] is not None
+        assert time.time() - f["last_append_unix"] < 120
+
+    def test_freshness_empty_store(self, tmp_path):
+        store = Store.create(str(tmp_path / "s"), VOCAB)
+        f = store.freshness()
+        assert f["segments"] == 0
+        assert f["last_append_unix"] is None
+
+
+# ----------------------------------------------------- SIGKILL crash-resume
+class TestCrashResume:
+    def test_sigkill_mid_stream_resumes_exactly_once(self, tmp_path):
+        """Drive cooc_stream in a subprocess with the stall hook, SIGKILL it
+        after its 2nd seal, resume in-process: every doc exactly once and
+        counts equal to the batch build."""
+        c = corpus(120)
+        feed = str(tmp_path / "feed.txt")
+        collection_to_feed(feed, c)
+        store_path = str(tmp_path / "s")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC_DIR + os.pathsep + env.get("PYTHONPATH", "")
+        env["REPRO_TEST_STREAM_STALL_AFTER_SEALS"] = "2"
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.cooc_stream",
+             "--feed", feed, "--store", store_path,
+             "--vocab", str(VOCAB), "--seal-docs", "20",
+             "--source-id", "kill-test", "--idle-timeout-s", "60"],
+            env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+        )
+        try:
+            deadline = time.monotonic() + 60
+            seals = 0
+            while time.monotonic() < deadline:
+                if Store.exists(store_path):
+                    seals = StreamCursor(
+                        Store.open(store_path), "kill-test"
+                    ).load().seals
+                    if seals >= 2:
+                        break
+                assert proc.poll() is None, "daemon exited before stall"
+                time.sleep(0.05)
+            assert seals >= 2, "never reached the stall point"
+        finally:
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=30)
+
+        store = Store.open(store_path)
+        before = StreamCursor(store, "kill-test").load()
+        assert 0 < before.docs < c.num_docs
+        StreamIngestor(
+            store, FileTailSource(feed),
+            StreamConfig(seal_docs=20, max_docs=c.num_docs - before.docs),
+            source_id="kill-test",
+        ).run()
+        store.refresh()
+        assert store.num_docs == c.num_docs
+        assert StreamCursor(store, "kill-test").load().docs == c.num_docs
+        ref = batch_store(c, str(tmp_path / "batch"))
+        np.testing.assert_array_equal(store.dense(), ref.dense())
+        np.testing.assert_array_equal(store.df(), ref.df())
+
+
+# --------------------------------------------------------- serving satellites
+class TestServingFreshness:
+    def test_stats_freshness_block(self, tmp_path):
+        c = corpus(80)
+        path = str(tmp_path / "s")
+        batch_store(c, path)
+        with CoocServer(path, workers=1) as server:
+            server.client().topk([1, 2], k=4)
+            stats = server.stop()
+        f = stats["freshness"]
+        assert f["segments"] == 1
+        assert f["segments_by_version"] == {"v1": 1}
+        assert f["generation"] >= 1
+        assert f["seconds_since_last_append"] >= 0
+
+    def test_idle_refresh_sees_stream_commits(self, tmp_path):
+        """With refresh_interval_ms set, a server with zero traffic picks
+        up segments a stream daemon commits — freshness advances without a
+        single query."""
+        c = corpus(60)
+        path = str(tmp_path / "s")
+        store = batch_store(c, path)
+        server = CoocServer(
+            path, workers=1, stats_interval_s=0.15, refresh_interval_ms=75,
+        ).start()
+        try:
+            # wait for the worker's pre-stream view (spawn takes a moment);
+            # only then commit, so the idle refresh is what surfaces it
+            deadline = time.monotonic() + 30
+            while time.monotonic() < deadline:
+                if server.stats().get("freshness", {}).get("segments") == 1:
+                    break
+                time.sleep(0.1)
+            assert server.stats()["freshness"]["segments"] == 1
+            drain(store, corpus(30, seed=5), seal_docs=30, source_id="late")
+            gen = int(store.manifest["generation"])
+            deadline = time.monotonic() + 20
+            seen = {}
+            while time.monotonic() < deadline:
+                time.sleep(0.2)
+                seen = server.stats().get("freshness", {})
+                if seen.get("generation", 0) >= gen and seen.get("segments") == 2:
+                    break
+            assert seen.get("segments") == 2, seen
+            assert seen.get("generation", 0) >= gen
+        finally:
+            stats = server.stop()
+        assert stats["store_refreshes"] >= 1
+
+    def test_refresh_interval_validation(self):
+        from repro.store import ServingConfig
+
+        with pytest.raises(ValueError):
+            ServingConfig(refresh_interval_ms=-1)
