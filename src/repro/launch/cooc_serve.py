@@ -408,8 +408,16 @@ def serve(
         )
 
     if ingestor is not None:
-        ingestor.stop()
+        # don't raise: serving stats are still valid even if ingest died —
+        # but the failure must be loud, not a silently stale cursor
+        ingestor.stop(raise_on_error=False)
         served["stream"] = ingestor.summary()
+        if not ingestor.healthy:
+            print(
+                f"[stream] ingest FAILED, feed tailing stopped early: "
+                f"{served['stream']['error']}",
+                file=sys.stderr,
+            )
 
     store.refresh()  # a background compaction may have swapped segments
     stats = {

@@ -19,12 +19,20 @@ Concurrency model: segments are immutable, so the manifest is the only
 mutable state. Every commit is a read-modify-write of ``store.json`` under
 an advisory ``flock`` (``.store.lock``), which lets a **background
 compaction process** merge small segments while the owning process keeps
-appending — neither clobbers the other's manifest entry. Readers never
-lock: ``refresh()`` detects foreign commits with one ``stat()`` plus a
-``generation`` counter cross-check (the counter, serialized first in
-store.json, catches the in-place same-size same-mtime rewrite a bare stat
-signature can miss), and mmaps opened before a compaction keep working
-after it because POSIX unlink only detaches the name.
+appending — neither clobbers the other's manifest entry. Within one
+process, a single handle may also be shared across threads (a stream
+ingestor sealing while a compaction daemon polls ``refresh()``): the
+flock cannot serialize those (same file handle, same process), so a
+per-handle ``threading.RLock`` additionally guards every reassignment of
+``self.manifest`` — ``_commit`` holds it across its read-modify-write so
+a concurrent ``refresh()`` can never replace the manifest between the
+mutation and the save and silently drop the commit. Readers never take
+the cross-process lock: ``refresh()`` detects foreign commits with one
+``stat()`` plus a ``generation`` counter cross-check (the counter,
+serialized first in store.json, catches the in-place same-size same-mtime
+rewrite a bare stat signature can miss), and mmaps opened before a
+compaction keep working after it because POSIX unlink only detaches the
+name.
 
 Size-tiered compaction: ``plan_compaction()`` picks the smallest run of
 similar-sized segments (read-amplification reducers first, never a
@@ -41,6 +49,7 @@ import os
 import queue
 import re
 import shutil
+import threading
 
 import numpy as np
 
@@ -62,6 +71,18 @@ STORE_META = "store.json"
 LOCK_NAME = ".store.lock"
 
 _GENERATION_RE = re.compile(rb'"generation":\s*(\d+)')
+_PENDING_RE = re.compile(r"\.pending-(\d+)-")
+
+
+def _pid_alive(pid: int) -> bool:
+    """Whether ``pid`` is a live process (EPERM counts as alive)."""
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except OSError:  # EPERM and friends: someone is there
+        return True
+    return True
 
 
 class Store:
@@ -72,6 +93,10 @@ class Store:
         self.manifest = manifest
         self.registry = registry
         self._segments: dict[str, object] = {}
+        # serializes manifest reassignment across threads sharing this
+        # handle (commit vs. refresh); the flock in _commit only covers
+        # other processes / other handles
+        self._mutex = threading.RLock()
         # bumped on every manifest mutation; query engines use it to know
         # when their row caches are stale
         self.version = 0
@@ -112,11 +137,31 @@ class Store:
     @classmethod
     def open(cls, path: str, *, registry=None) -> "Store":
         with open(os.path.join(path, STORE_META)) as f:
-            return cls(path, json.load(f), registry=registry)
+            store = cls(path, json.load(f), registry=registry)
+        store._sweep_pending()
+        return store
 
     @staticmethod
     def exists(path: str) -> bool:
         return os.path.exists(os.path.join(path, STORE_META))
+
+    def _sweep_pending(self) -> None:
+        """Remove ``.pending-*`` segment directories abandoned by dead
+        writers. Pending dirs are only referenced by the ``single_commit``
+        call that created them — never by a manifest — so once the pid
+        embedded in the name is gone (SIGKILL mid-seal), the directory is
+        unreachable garbage. Live pids are left alone: their commit may
+        still be in flight."""
+        try:
+            entries = os.listdir(self.path)
+        except OSError:
+            return
+        for name in entries:
+            m = _PENDING_RE.match(name)
+            if m and not _pid_alive(int(m.group(1))):
+                shutil.rmtree(
+                    os.path.join(self.path, name), ignore_errors=True
+                )
 
     def _stat_sig(self) -> tuple | None:
         try:
@@ -136,44 +181,51 @@ class Store:
         return int(m.group(1)) if m else None
 
     def _save(self) -> None:
-        # generation first: refresh()'s staleness probe reads only the head
-        gen = int(self.manifest.get("generation", 0)) + 1
-        m = {"generation": gen}
-        m.update((k, v) for k, v in self.manifest.items() if k != "generation")
-        self.manifest = m
-        tmp = os.path.join(self.path, STORE_META + ".tmp")
-        with open(tmp, "w") as f:
-            json.dump(self.manifest, f, indent=2)
-        os.replace(tmp, os.path.join(self.path, STORE_META))
-        self._meta_sig = self._stat_sig()
-        self.version += 1
+        with self._mutex:
+            # generation first: refresh()'s probe reads only the head
+            gen = int(self.manifest.get("generation", 0)) + 1
+            m = {"generation": gen}
+            m.update(
+                (k, v) for k, v in self.manifest.items() if k != "generation"
+            )
+            self.manifest = m
+            tmp = os.path.join(self.path, STORE_META + ".tmp")
+            with open(tmp, "w") as f:
+                json.dump(self.manifest, f, indent=2)
+            os.replace(tmp, os.path.join(self.path, STORE_META))
+            self._meta_sig = self._stat_sig()
+            self.version += 1
 
     def _commit(self, mutate) -> None:
-        """Read-modify-write the manifest under the store's advisory lock:
-        re-read the freshest manifest (a background compaction or a sibling
-        appender may have committed since we last looked), apply ``mutate``
-        to it, write. Segments being immutable, this is the only mutual
-        exclusion the store needs."""
-        lf = open(os.path.join(self.path, LOCK_NAME), "a")
-        try:
-            if fcntl is not None:
-                fcntl.flock(lf, fcntl.LOCK_EX)
+        """Read-modify-write the manifest under the store's advisory lock
+        (cross-process) *and* the handle mutex (cross-thread): re-read the
+        freshest manifest (a background compaction or a sibling appender
+        may have committed since we last looked), apply ``mutate`` to it,
+        write. The mutex stays held from the re-read through ``_save`` so
+        a concurrent ``refresh()`` on this same handle can never reassign
+        ``self.manifest`` mid-commit and drop the mutation."""
+        with self._mutex:
+            lf = open(os.path.join(self.path, LOCK_NAME), "a")
             try:
-                with open(os.path.join(self.path, STORE_META)) as f:
-                    on_disk = json.load(f)
-            except (OSError, json.JSONDecodeError):
-                on_disk = None
-            if on_disk is not None and on_disk.get(
-                "generation", 0
-            ) != self.manifest.get("generation", 0):
-                # a foreign commit landed: adopt it (and drop lazily-opened
-                # segments it may have removed) before applying ours on top
-                self.manifest = on_disk
-                self._segments.clear()
-            mutate(self.manifest)
-            self._save()
-        finally:
-            lf.close()  # closing releases the flock
+                if fcntl is not None:
+                    fcntl.flock(lf, fcntl.LOCK_EX)
+                try:
+                    with open(os.path.join(self.path, STORE_META)) as f:
+                        on_disk = json.load(f)
+                except (OSError, json.JSONDecodeError):
+                    on_disk = None
+                if on_disk is not None and on_disk.get(
+                    "generation", 0
+                ) != self.manifest.get("generation", 0):
+                    # a foreign commit landed: adopt it (and drop lazily-
+                    # opened segments it may have removed) before applying
+                    # ours on top
+                    self.manifest = on_disk
+                    self._segments.clear()
+                mutate(self.manifest)
+                self._save()
+            finally:
+                lf.close()  # closing releases the flock
 
     def refresh(self) -> bool:
         """Pick up another process's manifest commit (append / ingest /
@@ -189,19 +241,24 @@ class Store:
 
         Returns True if the manifest changed.
         """
-        sig = self._stat_sig()
-        if sig is None:
-            return False
-        if sig == self._meta_sig:
-            gen = self._probe_generation()
-            if gen is None or gen == int(self.manifest.get("generation", 0)):
+        # under the handle mutex: a _commit in another thread of this
+        # process must never see its manifest swapped out mid-mutation
+        with self._mutex:
+            sig = self._stat_sig()
+            if sig is None:
                 return False
-        with open(os.path.join(self.path, STORE_META)) as f:
-            self.manifest = json.load(f)
-        self._meta_sig = sig
-        self._segments.clear()
-        self.version += 1
-        return True
+            if sig == self._meta_sig:
+                gen = self._probe_generation()
+                if gen is None or gen == int(
+                    self.manifest.get("generation", 0)
+                ):
+                    return False
+            with open(os.path.join(self.path, STORE_META)) as f:
+                self.manifest = json.load(f)
+            self._meta_sig = sig
+            self._segments.clear()
+            self.version += 1
+            return True
 
     # ------------------------------------------------------- properties
     @property
@@ -361,9 +418,10 @@ class Store:
         same locked commit that appends the segment, *before* the append —
         so an unrelated manifest key (e.g. a stream cursor) advances
         atomically with the segment becoming visible. It may raise to abort
-        the commit: with ``single_commit`` the written segment is then an
-        unreferenced pending directory (crash-equivalent, cleaned up on the
-        next attempt), never a committed one."""
+        the commit: with ``single_commit`` the pending directory is then
+        removed before the exception propagates, so an abort leaves no
+        trace. Only a crash (SIGKILL mid-seal) leaves a pending dir behind,
+        and ``Store.open``'s dead-pid sweep collects those."""
         if single_commit:
             tmp_dir = os.path.join(
                 self.path, f".pending-{os.getpid()}-{id(rows):x}"
@@ -384,7 +442,14 @@ class Store:
                 m["segments"].append(name)
                 holder["name"] = name
 
-            self._commit(mut)
+            try:
+                self._commit(mut)
+            except BaseException:
+                # aborted (e.g. a stream-cursor fence): the segment was
+                # never published, so drop the pending dir now instead of
+                # leaking it until some future dead-pid sweep
+                shutil.rmtree(tmp_dir, ignore_errors=True)
+                raise
             return self._segment(holder["name"])
         name, seg_dir = self._reserve_segment()
 

@@ -100,6 +100,7 @@ class StreamIngestor:
         self.seal_hist = obs.Histogram()    # per-seal commit duration, seconds
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
         self._state = self.cursor.load()
         self._docs_run = 0                  # committed by *this* run
         self._seals_run = 0
@@ -111,17 +112,45 @@ class StreamIngestor:
         if self._thread is not None:
             raise RuntimeError("ingestor already started")
         self._thread = threading.Thread(
-            target=self.run, name=f"stream-{self.source_id}", daemon=True
+            target=self._run_guarded, name=f"stream-{self.source_id}",
+            daemon=True,
         )
         self._thread.start()
         return self
 
-    def stop(self, timeout: float | None = 30.0) -> None:
-        """Ask the loop to finish (it seals whatever is buffered first)."""
+    def _run_guarded(self) -> None:
+        """Thread target: a failure (e.g. a StreamCursorConflict from a
+        second daemon on the same source) must not vanish into a default
+        thread traceback while the host keeps serving — it is recorded,
+        flips ``healthy``, lands in ``summary()``, and re-raises from the
+        next ``stop()``."""
+        try:
+            self.run()
+        except BaseException as e:
+            self._error = e
+            self.reg.counter("stream/failures").inc(1)
+
+    @property
+    def healthy(self) -> bool:
+        """False once a ``start()``-ed run has died on an exception."""
+        return self._error is None
+
+    @property
+    def error(self) -> BaseException | None:
+        return self._error
+
+    def stop(self, timeout: float | None = 30.0, *,
+             raise_on_error: bool = True) -> None:
+        """Ask the loop to finish (it seals whatever is buffered first).
+        If the threaded run died on an exception, re-raises it here —
+        pass ``raise_on_error=False`` to inspect ``summary()`` /
+        ``error`` instead."""
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout)
             self._thread = None
+        if raise_on_error and self._error is not None:
+            raise self._error
 
     # ------------------------------------------------------------- the loop
     def run(self) -> dict:
@@ -251,7 +280,10 @@ class StreamIngestor:
             "docs_this_run": self._docs_run,
             "seals_this_run": self._seals_run,
             "max_visibility_lag_ms": self.config.max_visibility_lag_ms,
+            "healthy": self.healthy,
         }
+        if self._error is not None:
+            out["error"] = f"{type(self._error).__name__}: {self._error}"
         if self.lag_hist.count:
             out["visibility_lag_ms"] = {
                 "p50": self.lag_hist.percentile(50) * 1e3,

@@ -112,8 +112,10 @@ class FileTailSource:
     line between the current offset and EOF (bounded by
     ``max_bytes_per_poll`` per call) and leaves a trailing partial line —
     bytes after the last ``\\n`` — for the next poll, so a producer mid-
-    ``write`` is never observed torn. A missing file is "no documents yet",
-    not an error: the daemon may start before its producer.
+    ``write`` is never observed torn. A single document longer than
+    ``max_bytes_per_poll`` grows the read window for that poll rather than
+    stalling forever with no progress. A missing file is "no documents
+    yet", not an error: the daemon may start before its producer.
     """
 
     def __init__(self, path: str, *, start_offset: int = 0,
@@ -147,7 +149,16 @@ class FileTailSource:
         out = []
         with open(self.path, "rb") as f:
             f.seek(self._offset)
-            chunk = f.read(self.max_bytes_per_poll)
+            read_size = self.max_bytes_per_poll
+            chunk = f.read(read_size)
+            # one document longer than the window must not stall the
+            # tailer forever: a full chunk with no newline means the line
+            # continues past it, so grow the window until the line's end
+            # (or EOF — then it is a genuine partial still being written)
+            while b"\n" not in chunk and len(chunk) == read_size:
+                read_size *= 2
+                f.seek(self._offset)
+                chunk = f.read(read_size)
         consumed = 0
         while True:
             if max_docs is not None and len(out) >= max_docs:

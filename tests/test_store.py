@@ -652,3 +652,67 @@ def test_concurrent_appenders_never_drop_segments(tmp_path):
     for who in (0, 1):
         for k in range(6):
             assert store.pair_count(who, 10 + k) == 1
+
+
+# ------------------------------------- shared-handle thread safety / pending
+def test_refresh_during_commit_never_drops_mutation(tmp_path):
+    """One Store handle shared across threads (stream ingestor sealing
+    while a compaction daemon polls refresh()): a refresh() landing
+    between _commit's mutate and _save must not replace the manifest and
+    silently drop the mutation. The handle mutex makes every commit's
+    mark durable."""
+    import threading
+
+    store = Store.create(str(tmp_path / "s"), 50)
+    stop = threading.Event()
+
+    def refresher():
+        while not stop.is_set():
+            store.refresh()
+
+    t = threading.Thread(target=refresher, daemon=True)
+    t.start()
+    try:
+        for i in range(200):
+            store._commit(lambda m, i=i: m.setdefault("ticks", []).append(i))
+    finally:
+        stop.set()
+        t.join(timeout=10)
+    store.refresh()
+    assert store.manifest["ticks"] == list(range(200))
+
+
+def test_stale_pending_dirs_swept_on_open(tmp_path):
+    """A .pending-* dir from a SIGKILLed single_commit (dead pid) is
+    garbage-collected by Store.open; a live writer's dir is left alone."""
+    path = str(tmp_path / "s")
+    Store.create(path, 50)
+    dead = os.path.join(path, ".pending-999999999-abc")  # no such pid
+    live = os.path.join(path, f".pending-{os.getpid()}-abc")
+    os.makedirs(dead)
+    os.makedirs(live)
+    Store.open(path)
+    assert not os.path.exists(dead)
+    assert os.path.exists(live)
+
+
+def test_aborted_single_commit_leaves_no_pending_dir(tmp_path):
+    """An extra_mutate abort removes the pending segment dir immediately —
+    repeated aborts (e.g. stream-cursor fence losses) must not accumulate
+    orphan directories."""
+    store = Store.create(str(tmp_path / "s"), 50)
+
+    def boom(m):
+        raise RuntimeError("fenced")
+
+    for _ in range(3):
+        with pytest.raises(RuntimeError, match="fenced"):
+            store.add_segment_from_rows(
+                iter([(0, np.array([1], np.int32), np.array([1], np.int64))]),
+                num_docs=1,
+                single_commit=True,
+                extra_mutate=boom,
+            )
+    leftovers = [n for n in os.listdir(str(tmp_path / "s"))
+                 if n.startswith(".pending-")]
+    assert leftovers == []

@@ -116,6 +116,36 @@ class TestSources:
         src = FileTailSource(str(tmp_path / "nope.txt"))
         assert src.poll() == []
 
+    def test_file_tail_line_longer_than_poll_window(self, tmp_path):
+        """A document longer than max_bytes_per_poll must still be
+        consumed (the read window grows), not livelock the tailer into
+        returning [] forever with no offset progress."""
+        feed = str(tmp_path / "feed.txt")
+        big = list(range(100))  # ~290 bytes, far over the 64-byte window
+        write_feed(feed, [big, [7]])
+        src = FileTailSource(feed, max_bytes_per_poll=64)
+        got = src.poll()
+        assert len(got) == 2
+        np.testing.assert_array_equal(got[0][1], big)
+        np.testing.assert_array_equal(got[1][1], [7])
+        assert src.offset == os.path.getsize(feed)
+
+    def test_file_tail_torn_long_line_waits(self, tmp_path):
+        """A long line with no newline yet is a torn write, not a stall:
+        poll returns [] without advancing, then consumes the line once the
+        producer finishes it."""
+        feed = str(tmp_path / "feed.txt")
+        with open(feed, "w") as f:
+            f.write(" ".join(str(t) for t in range(100)))  # no newline
+        src = FileTailSource(feed, max_bytes_per_poll=64)
+        assert src.poll() == []
+        assert src.offset == 0
+        with open(feed, "a") as f:
+            f.write("\n")
+        got = src.poll()
+        assert len(got) == 1
+        np.testing.assert_array_equal(got[0][1], list(range(100)))
+
     def test_collection_to_feed_roundtrip(self, tmp_path):
         c = corpus(40)
         feed = str(tmp_path / "feed.txt")
@@ -237,6 +267,42 @@ class TestIngestor:
                              source_id="bad")
         with pytest.raises(ValueError, match="term IDs outside"):
             ing.run()
+
+    def test_threaded_failure_is_surfaced_not_silent(self, tmp_path):
+        """A StreamCursorConflict inside a start()-ed ingestor thread must
+        not die as a default thread traceback while the host keeps
+        serving: it flips healthy, lands in summary(), re-raises from
+        stop(), and leaves no orphan .pending dir."""
+        path = str(tmp_path / "s")
+        store = Store.create(path, VOCAB)
+        src = QueueSource()
+        ing = StreamIngestor(
+            store, src,
+            StreamConfig(seal_docs=1, poll_interval_ms=5.0),
+            source_id="contested",
+        ).start()
+        try:
+            # a second daemon wins the source: advance the cursor through
+            # a separate handle, then let the first one's seal hit the fence
+            drain(Store.open(path), corpus(5, seed=3), seal_docs=5,
+                  source_id="contested")
+            src.push([1, 2, 3])
+            deadline = time.monotonic() + 30
+            while time.monotonic() < deadline and ing.healthy:
+                time.sleep(0.02)
+            assert not ing.healthy
+            assert isinstance(ing.error, StreamCursorConflict)
+            summary = ing.summary()
+            assert summary["healthy"] is False
+            assert "StreamCursorConflict" in summary["error"]
+            with pytest.raises(StreamCursorConflict):
+                ing.stop()
+        finally:
+            src.close()
+            ing.stop(raise_on_error=False)
+        # the losing seal was aborted cleanly: nothing pending left behind
+        assert not [n for n in os.listdir(path)
+                    if n.startswith(".pending-")]
 
     def test_inprocess_resume_exactly_once(self, tmp_path):
         """Stop mid-feed (max_docs), restart with a fresh ingestor + source:
