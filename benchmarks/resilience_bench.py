@@ -1,0 +1,344 @@
+"""Resilience benchmark: the fault-tolerance artifact for the serving layer.
+
+The serving benchmarks measure throughput of a healthy fleet; this one
+measures what the fleet does when things go wrong (``BENCH_resilience.json``).
+Service time is made deterministic with the ``stall-queue`` failpoint
+(``repro.runtime.faultinject``) so capacity — and therefore "above
+capacity" — is a known constant instead of a machine-dependent guess:
+
+* **unloaded axis** — an open-loop arrival process at ~30% of capacity
+  against a single stalled worker records the admitted-latency baseline
+  (p50/p99). Every request is admitted; this is what latency costs when
+  the queue never fills.
+* **overload axis** — the same server, arrivals at ~3x capacity, with
+  admission control bounding the queue (``max_inflight``). The **gates**
+  require (a) a non-zero shed rate — the server must refuse work, not
+  buffer it — and (b) admitted-request p99 <= 2x the unloaded p99: the
+  bounded queue keeps latency flat for the requests it accepts instead
+  of letting every response drown behind an unbounded backlog.
+* **kill axis** — closed-loop clients with retries drive a routed
+  two-worker fleet while the ``kill-worker`` failpoint SIGKILLs worker 0
+  after every ``kill_after`` batches, through the whole respawn budget
+  and into permanent degradation (re-route). The **gate** requires zero
+  lost-forever requests: every request either completes (possibly after
+  a typed ``WorkerDied`` retry) or fails fast with a typed error — none
+  may sit out its full client timeout.
+
+    PYTHONPATH=src:. python benchmarks/resilience_bench.py --json BENCH_resilience.json
+    PYTHONPATH=src:. python benchmarks/resilience_bench.py --smoke --json BENCH_resilience.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import threading
+import time
+
+from repro.core.cooc import count_to_store
+from repro.data.corpus import synthetic_zipf_collection
+from repro.runtime import faultinject
+from repro.store import CoocServer, ServerOverloaded, WorkerDied
+
+
+def _pct(xs: list[float], q: float) -> float:
+    """The q-th percentile (0..100) of ``xs`` by nearest-rank."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    idx = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return xs[idx]
+
+
+def _build_store(workdir: str, *, docs: int, vocab: int, mean_len: float,
+                 seed: int, method: str) -> str:
+    c = synthetic_zipf_collection(docs, vocab=vocab, mean_len=mean_len,
+                                  seed=seed)
+    path = os.path.join(workdir, "store")
+    count_to_store(method, c, path)
+    return path
+
+
+class _faults:
+    """Arm ``REPRO_FAULTS`` for the servers spawned inside the block."""
+
+    def __init__(self, spec: str):
+        self.spec = spec
+
+    def __enter__(self):
+        self._old = os.environ.get(faultinject.ENV_VAR)
+        os.environ[faultinject.ENV_VAR] = self.spec
+
+    def __exit__(self, *exc):
+        if self._old is None:
+            os.environ.pop(faultinject.ENV_VAR, None)
+        else:
+            os.environ[faultinject.ENV_VAR] = self._old
+
+
+def _open_loop(server: CoocServer, *, rate: float, duration_s: float,
+               threads: int, vocab: int, k: int, timeout: float) -> dict:
+    """Fire top-k requests at ``rate``/s for ``duration_s`` regardless of
+    completions (open loop: a slow server does not slow the arrivals —
+    sheds return instantly, so the schedule survives overload). Arrival
+    slot ``i`` is handled by thread ``i % threads``; outcomes and
+    admitted latencies are pooled."""
+    n_arrivals = max(1, int(rate * duration_s))
+    lock = threading.Lock()
+    out = {"admitted_ms": [], "shed": 0, "timeout": 0, "worker_died": 0,
+           "late_arrivals": 0}
+    t0 = time.monotonic() + 0.05  # common epoch, slightly in the future
+
+    def fire(tid: int):
+        client = server.client()
+        for i in range(tid, n_arrivals, threads):
+            target = t0 + i / rate
+            delay = target - time.monotonic()
+            if delay > 0:
+                time.sleep(delay)
+            elif delay < -0.05:
+                with lock:
+                    out["late_arrivals"] += 1
+            term = i % vocab
+            start = time.monotonic()
+            try:
+                client.topk([term], k=k, timeout=timeout)
+                ms = (time.monotonic() - start) * 1e3
+                with lock:
+                    out["admitted_ms"].append(ms)
+            except ServerOverloaded:
+                with lock:
+                    out["shed"] += 1
+            except TimeoutError:
+                with lock:
+                    out["timeout"] += 1
+            except WorkerDied:
+                with lock:
+                    out["worker_died"] += 1
+
+    ts = [threading.Thread(target=fire, args=(tid,), daemon=True)
+          for tid in range(threads)]
+    wall = time.monotonic()
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    out["wall_s"] = round(time.monotonic() - wall, 3)
+    out["arrivals"] = n_arrivals
+    return out
+
+
+def run_latency_axes(store_path: str, *, stall_s: float, max_batch: int,
+                     max_inflight: int, unloaded_rate: float,
+                     overload_rate: float, duration_s: float,
+                     threads: int, vocab: int, k: int) -> tuple[dict, dict]:
+    """The unloaded baseline and the overload run, same server config
+    (one stalled worker, bounded queue), different arrival rates."""
+
+    def run(rate: float) -> dict:
+        # a huge budget makes the stall per-batch for the whole run:
+        # service time ~= stall_s, capacity ~= max_batch / stall_s
+        with _faults(f"stall-queue={stall_s}:1000000"):
+            with CoocServer(store_path, workers=1, batch_window_ms=1.0,
+                            max_batch=max_batch, max_inflight=max_inflight,
+                            max_respawns=0) as server:
+                warm = server.client()
+                for t in range(3):  # page the store in before the clock
+                    warm.topk([t], k=k, timeout=60.0)
+                r = _open_loop(server, rate=rate, duration_s=duration_s,
+                               threads=threads, vocab=vocab, k=k,
+                               timeout=60.0)
+                r["server_resilience"] = server.stats()["resilience"]
+        lat = r.pop("admitted_ms")
+        r["admitted"] = len(lat)
+        r["p50_ms"] = round(_pct(lat, 50), 2)
+        r["p99_ms"] = round(_pct(lat, 99), 2)
+        r["shed_rate"] = round(r["shed"] / max(1, r["arrivals"]), 4)
+        r["rate_rps"] = rate
+        return r
+
+    capacity = max_batch / stall_s
+    unloaded = run(unloaded_rate)
+    unloaded["capacity_rps"] = round(capacity, 1)
+    overload = run(overload_rate)
+    overload["capacity_rps"] = round(capacity, 1)
+    return unloaded, overload
+
+
+def run_kill_axis(store_path: str, *, kill_after: int, max_respawns: int,
+                  clients: int, requests_per_client: int, retries: int,
+                  timeout: float, vocab: int, k: int) -> dict:
+    """Closed-loop load through a recurring kill-respawn schedule: every
+    incarnation of worker 0 dies after ``kill_after`` batches, until the
+    respawn budget is spent and its slice is re-routed. A request is
+    *lost forever* if it neither completed nor failed typed — i.e. it sat
+    out the full client timeout (TimeoutError)."""
+    lock = threading.Lock()
+    out = {"ok": 0, "typed_failures": 0, "lost_forever": 0,
+           "worst_failure_ms": 0.0}
+
+    with _faults(f"kill-worker=0:{kill_after}"):
+        with CoocServer(store_path, workers=2, routing=True,
+                        batch_window_ms=1.0, max_respawns=max_respawns) \
+                as server:
+
+            def drive(tid: int):
+                client = server.client()
+                for i in range(requests_per_client):
+                    term = (tid * requests_per_client + i) % vocab
+                    start = time.monotonic()
+                    try:
+                        client.topk([term], k=k, timeout=timeout,
+                                    retries=retries)
+                        with lock:
+                            out["ok"] += 1
+                    except (WorkerDied, ServerOverloaded):
+                        ms = (time.monotonic() - start) * 1e3
+                        with lock:
+                            out["typed_failures"] += 1
+                            out["worst_failure_ms"] = max(
+                                out["worst_failure_ms"], ms)
+                    except TimeoutError:
+                        with lock:
+                            out["lost_forever"] += 1
+
+            ts = [threading.Thread(target=drive, args=(tid,), daemon=True)
+                  for tid in range(clients)]
+            wall = time.monotonic()
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            out["wall_s"] = round(time.monotonic() - wall, 3)
+            out["server_resilience"] = server.stats()["resilience"]
+
+    total = clients * requests_per_client
+    out["requests"] = total
+    out["worst_failure_ms"] = round(out["worst_failure_ms"], 1)
+    out["throughput_rps"] = round(total / max(out["wall_s"], 1e-9), 1)
+    out["kill_after_batches"] = kill_after
+    out["max_respawns"] = max_respawns
+    return out
+
+
+def run_resilience(
+    json_path: str | None = None,
+    *,
+    smoke: bool = False,
+    docs: int | None = None,
+    vocab: int = 512,
+    mean_len: float = 12.0,
+    method: str = "list-scan",
+    seed: int = 0,
+    stall_s: float = 0.08,
+    max_batch: int = 16,
+    max_inflight: int = 8,
+    duration_s: float | None = None,
+    workdir: str | None = None,
+) -> dict:
+    docs = docs if docs is not None else (300 if smoke else 1_500)
+    duration_s = duration_s if duration_s is not None else (
+        4.0 if smoke else 10.0)
+    requests_per_client = 40 if smoke else 150
+    workdir = workdir or os.path.join(
+        os.getcwd(), f".resilience_bench_{os.getpid()}"
+    )
+    shutil.rmtree(workdir, ignore_errors=True)
+    os.makedirs(workdir)
+    try:
+        store_path = _build_store(workdir, docs=docs, vocab=vocab,
+                                  mean_len=mean_len, seed=seed,
+                                  method=method)
+        capacity = max_batch / stall_s
+        unloaded, overload = run_latency_axes(
+            store_path, stall_s=stall_s, max_batch=max_batch,
+            max_inflight=max_inflight,
+            unloaded_rate=0.3 * capacity, overload_rate=3.0 * capacity,
+            duration_s=duration_s, threads=64, vocab=min(vocab, 64), k=8,
+        )
+        print(f"[unloaded] {unloaded['admitted']}/{unloaded['arrivals']} "
+              f"admitted at {unloaded['rate_rps']:.0f} rps "
+              f"(capacity ~{capacity:.0f}), p50 {unloaded['p50_ms']}ms, "
+              f"p99 {unloaded['p99_ms']}ms")
+        print(f"[overload] {overload['admitted']}/{overload['arrivals']} "
+              f"admitted at {overload['rate_rps']:.0f} rps, shed_rate "
+              f"{overload['shed_rate']}, p99 {overload['p99_ms']}ms")
+
+        kill = run_kill_axis(
+            store_path, kill_after=8 if smoke else 20, max_respawns=3,
+            clients=4, requests_per_client=requests_per_client,
+            retries=6, timeout=30.0, vocab=min(vocab, 64), k=8,
+        )
+        print(f"[kill] {kill['ok']}/{kill['requests']} ok, "
+              f"{kill['typed_failures']} typed failures, "
+              f"{kill['lost_forever']} lost forever; respawns="
+              f"{kill['server_resilience']['respawns']}")
+
+        p99_ratio = (overload["p99_ms"] / unloaded["p99_ms"]
+                     if unloaded["p99_ms"] else 0.0)
+        gate = {
+            "overload_shed_rate": overload["shed_rate"],
+            "overload_shed_ok": overload["shed"] > 0,
+            "admitted_p99_ratio": round(p99_ratio, 3),
+            "admitted_p99_ok": overload["p99_ms"] <= 2.0 * unloaded["p99_ms"],
+            "kill_respawns": kill["server_resilience"]["respawns"],
+            "kill_respawn_ok": kill["server_resilience"]["respawns"] >= 1,
+            "lost_forever": kill["lost_forever"],
+            "no_lost_requests_ok": kill["lost_forever"] == 0,
+        }
+        out = {
+            "suite": "resilience",
+            "config": {
+                "docs": docs, "vocab": vocab, "mean_len": mean_len,
+                "method": method, "seed": seed, "stall_s": stall_s,
+                "max_batch": max_batch, "max_inflight": max_inflight,
+                "duration_s": duration_s, "smoke": smoke,
+            },
+            "unloaded": unloaded,
+            "overload": overload,
+            "kill": kill,
+            "gate": gate,
+        }
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(out, f, indent=2)
+            print(f"[json] -> {json_path}")
+        failures = [k for k in ("overload_shed_ok", "admitted_p99_ok",
+                                "kill_respawn_ok", "no_lost_requests_ok")
+                    if not gate[k]]
+        if failures:
+            raise SystemExit(f"resilience gates failed: {failures}")
+        return out
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus / short axes for CI")
+    ap.add_argument("--docs", type=int, default=None)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--stall-s", type=float, default=0.08,
+                    help="injected per-batch service time (sets capacity)")
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-inflight", type=int, default=8,
+                    help="admission-control queue bound per worker")
+    ap.add_argument("--duration-s", type=float, default=None,
+                    help="open-loop axis length in seconds")
+    ap.add_argument("--method", default="list-scan")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run_resilience(
+        args.json, smoke=args.smoke, docs=args.docs, vocab=args.vocab,
+        stall_s=args.stall_s, max_batch=args.max_batch,
+        max_inflight=args.max_inflight, duration_s=args.duration_s,
+        method=args.method, seed=args.seed,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,15 @@ stats JSON gains a ``stream`` key (cursor position, visibility-lag
 percentiles) and multi-worker stats a ``freshness`` block (manifest
 generation, segment census, seconds since last append).
 
+``--max-inflight`` bounds each worker's request queue (overflow is shed
+as typed ``ServerOverloaded`` and reported under ``"shed"`` instead of
+queueing without limit), ``--deadline-ms`` propagates the client timeout
+in the request envelope so workers skip expired requests
+(``"deadline_timeouts"``), and ``--max-respawns`` sets the supervisor's
+replacement budget for dead workers — the fault-tolerance layer of
+docs/serving.md#degradation--recovery, surfaced in the stats JSON's
+``serving.resilience`` block.
+
 ``--kernel`` picks the score-and-select backend for either topology:
 ``numpy`` (jitted reference) or ``pallas`` (fused top-k gather kernel;
 interpreter mode off-TPU). Results are bit-identical between the two.
@@ -73,12 +82,14 @@ import numpy as np
 from repro import obs
 from repro.core.cooc import count_to_store
 from repro.data.corpus import _zipf_probs, synthetic_zipf_collection
-from repro.store import CoocServer, QueryEngine, Store
+from repro.store import CoocServer, QueryEngine, ServerOverloaded, Store
 
 
 def _percentiles(lat_s: list[float]) -> dict:
     """Client-side wall percentiles (queue transport included) — compare
     with the server-side ``server_timing`` histograms."""
+    if not lat_s:  # everything shed/expired: no admitted latencies
+        return {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0}
     a = np.asarray(lat_s) * 1e3
     return {
         "p50_ms": round(float(np.percentile(a, 50)), 3),
@@ -193,6 +204,7 @@ def _serve_multiprocess(
     workers, clients, batch_window_ms, kernel, seed,
     routing=False, cache_rows=4096, metrics_interval=0.0,
     keep_metrics=False, compact_store=None, refresh_interval_ms=0.0,
+    max_inflight=0, max_respawns=2, deadline_ms=0.0,
 ) -> dict:
     """Two phases (all-clients top-k, then all-clients pair lookups),
     barrier-aligned so each workload's QPS is measured against its own
@@ -200,10 +212,18 @@ def _serve_multiprocess(
 
     ``compact_store`` (from ``--compact``) starts a background compaction
     right after the workers spawn: the merge commits mid-workload and the
-    workers pick the new manifest up via their between-batch refresh()."""
+    workers pick the new manifest up via their between-batch refresh().
+
+    ``max_inflight`` / ``deadline_ms`` turn on admission control: a
+    request shed at a full queue (typed ``ServerOverloaded``) or expired
+    past its deadline (``TimeoutError``) is counted — under ``shed`` /
+    ``deadline_timeouts`` — instead of aborting the workload, and drops
+    out of the latency percentiles (they cover admitted requests)."""
     per_client = max(queries // (batch * clients), 1)
+    timeout_s = deadline_ms / 1e3 if deadline_ms > 0 else 60.0
     lat_topk: list[float] = []
     lat_pair: list[float] = []
+    rejected = {"shed": 0, "deadline_timeouts": 0}
     spans: dict[str, list[tuple[float, float]]] = {"topk": [], "pair": []}
     errors: list[Exception] = []
     lock = threading.Lock()
@@ -214,6 +234,7 @@ def _serve_multiprocess(
         kernel=kernel, routing=routing, cache_rows=cache_rows,
         stats_interval_s=metrics_interval,
         refresh_interval_ms=refresh_interval_ms,
+        max_inflight=max_inflight, max_respawns=max_respawns,
     ).start()
     compact_handle = _start_compaction(compact_store) if compact_store else None
 
@@ -234,19 +255,30 @@ def _serve_multiprocess(
         try:
             client = server.client()
             rng = np.random.default_rng(seed + 1 + idx)
-            client.topk(draw(rng, batch), k=topk, score=score)  # warm-up
-            client.pair_counts(
-                np.stack([draw(rng, batch), draw(rng, batch)], axis=1)
-            )
+            rej = {"shed": 0, "deadline_timeouts": 0}
+
+            def call(fn, *a, **kw):
+                try:
+                    t0 = time.perf_counter()
+                    fn(*a, timeout=timeout_s, **kw)
+                    return time.perf_counter() - t0
+                except ServerOverloaded:
+                    rej["shed"] += 1
+                except TimeoutError:
+                    rej["deadline_timeouts"] += 1
+                return None
+
+            call(client.topk, draw(rng, batch), k=topk, score=score)  # warm-up
+            call(client.pair_counts,
+                 np.stack([draw(rng, batch), draw(rng, batch)], axis=1))
 
             barrier.wait()
             phase0 = time.perf_counter()
             ltk = []
             for _ in range(per_client):
-                terms = draw(rng, batch)
-                t0 = time.perf_counter()
-                client.topk(terms, k=topk, score=score)
-                ltk.append(time.perf_counter() - t0)
+                dt = call(client.topk, draw(rng, batch), k=topk, score=score)
+                if dt is not None:
+                    ltk.append(dt)
             topk_span = (phase0, time.perf_counter())
 
             barrier.wait()
@@ -254,14 +286,16 @@ def _serve_multiprocess(
             lpc = []
             for _ in range(per_client):
                 pairs = np.stack([draw(rng, batch), draw(rng, batch)], axis=1)
-                t0 = time.perf_counter()
-                client.pair_counts(pairs)
-                lpc.append(time.perf_counter() - t0)
+                dt = call(client.pair_counts, pairs)
+                if dt is not None:
+                    lpc.append(dt)
             pair_span = (phase0, time.perf_counter())
 
             with lock:
                 lat_topk.extend(ltk)
                 lat_pair.extend(lpc)
+                rejected["shed"] += rej["shed"]
+                rejected["deadline_timeouts"] += rej["deadline_timeouts"]
                 spans["topk"].append(topk_span)
                 spans["pair"].append(pair_span)
         except Exception as e:  # pragma: no cover - surfaced below
@@ -303,6 +337,8 @@ def _serve_multiprocess(
         **{f"pair_{k}": v for k, v in _percentiles(lat_pair).items()},
         "server_timing": sstats.get("server_timing", {}),
         "workers_lost": sstats.get("workers_lost", 0),
+        "shed": rejected["shed"],
+        "deadline_timeouts": rejected["deadline_timeouts"],
         "serving": serving,
     }
     if compact_handle is not None:
@@ -336,6 +372,9 @@ def serve(
     follow: str | None = None,
     refresh_interval_ms: float = 0.0,
     max_lag_ms: float = 2_000.0,
+    max_inflight: int = 0,
+    max_respawns: int = 2,
+    deadline_ms: float = 0.0,
 ) -> dict:
     """Build/open a store and replay a Zipf workload; returns the stats dict
     (and writes it as JSON to ``json_out`` if given).
@@ -350,7 +389,14 @@ def serve(
     line of space-separated term IDs) into the store **while serving**,
     sealing micro-segments under a ``max_lag_ms`` visibility budget —
     pair ``--workers N`` with ``refresh_interval_ms`` so even idle workers
-    see each seal; the ingest summary lands under ``"stream"``."""
+    see each seal; the ingest summary lands under ``"stream"``.
+
+    ``max_inflight`` bounds each worker's request queue (overflow is shed
+    as typed ``ServerOverloaded`` and reported under ``"shed"``);
+    ``deadline_ms`` makes the client timeout travel in the request
+    envelope so workers skip expired requests; ``max_respawns`` is the
+    supervisor's replacement budget per dead worker (multi-process
+    topology only — docs/serving.md#degradation--recovery)."""
     telemetry = bool(trace_out) or metrics_interval > 0
     reg = obs.configure(enabled=True) if telemetry else obs.get_registry()
     segment_version = (
@@ -405,6 +451,8 @@ def serve(
             metrics_interval=metrics_interval, keep_metrics=telemetry,
             compact_store=store if compact else None,
             refresh_interval_ms=refresh_interval_ms,
+            max_inflight=max_inflight, max_respawns=max_respawns,
+            deadline_ms=deadline_ms,
         )
 
     if ingestor is not None:
@@ -531,6 +579,23 @@ def main():
         help="visibility-lag budget for --follow: every tailed doc should "
              "be queryable within this long of arriving",
     )
+    ap.add_argument(
+        "--max-inflight", type=int, default=0,
+        help="admission control: bound each worker's request queue; "
+             "overflow is shed as typed ServerOverloaded and counted "
+             "(0 = unbounded)",
+    )
+    ap.add_argument(
+        "--deadline-ms", type=float, default=0.0,
+        help="per-request deadline: the client timeout travels in the "
+             "request envelope, so workers skip requests that expired in "
+             "the queue (0 = the 60s client default)",
+    )
+    ap.add_argument(
+        "--max-respawns", type=int, default=2,
+        help="how many times the supervisor replaces a dead worker before "
+             "routing around its slot permanently",
+    )
     args = ap.parse_args()
     serve(
         args.docs,
@@ -557,6 +622,9 @@ def main():
         follow=args.follow,
         refresh_interval_ms=args.refresh_interval_ms,
         max_lag_ms=args.max_lag_ms,
+        max_inflight=args.max_inflight,
+        max_respawns=args.max_respawns,
+        deadline_ms=args.deadline_ms,
     )
 
 

@@ -1,1 +1,3 @@
-"""Distributed runtime: sharding rules, fault tolerance, elastic re-meshing."""
+"""Distributed runtime: sharding rules, fault tolerance, elastic re-meshing,
+and env-gated fault injection (``runtime/faultinject.py``) for scripting
+failures into resilience tests and benchmarks."""

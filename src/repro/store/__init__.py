@@ -10,7 +10,8 @@ continuously growing store converged) → ``requests`` (typed query requests, Qu
 routing/coalescing, one execution path) → ``query`` (batched
 pair/top-k/PMI engine, numpy or Pallas kernel) → ``serving``
 (multi-process shared-mmap workers with cross-client micro-batching,
-hot-term routing, and streaming top-k).
+hot-term routing, streaming top-k, and supervised fault tolerance:
+worker respawn, admission control, deadline propagation).
 See docs/architecture.md for the dataflow, docs/formats.md for the
 on-disk layout, and docs/serving.md for the query API + wire protocol.
 """
@@ -38,7 +39,14 @@ from repro.store.requests import (
     route_term,
 )
 from repro.store.segments import CompactionHandle, Store
-from repro.store.serving import CoocClient, CoocServer, ServingConfig
+from repro.store.serving import (
+    CoocClient,
+    CoocServer,
+    ServerOverloaded,
+    ServingConfig,
+    ServingError,
+    WorkerDied,
+)
 
 __all__ = [
     "SpillSink",
@@ -68,4 +76,7 @@ __all__ = [
     "CoocServer",
     "CoocClient",
     "ServingConfig",
+    "ServingError",
+    "WorkerDied",
+    "ServerOverloaded",
 ]

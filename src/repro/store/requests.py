@@ -155,6 +155,50 @@ class NeighboursRequest:
 QueryRequest = TopKRequest | PairCountsRequest | NeighboursRequest
 
 
+# ---------------------------------------------------------------------------
+# wire envelopes
+# ---------------------------------------------------------------------------
+
+
+def make_envelope(
+    client_id: int,
+    request_id: int,
+    part: int,
+    parts: int,
+    request,
+    *,
+    t_submit: float | None = None,
+    deadline: float | None = None,
+) -> tuple:
+    """One wire envelope, the unit that crosses a serving request queue:
+
+        (client_id, request_id, part, parts, request, t_submit, deadline)
+
+    ``t_submit`` is the client's submit wall-clock (unix time — the one
+    clock two processes share; queue-wait histograms subtract it) and
+    ``deadline`` the absolute unix time after which the client has given
+    up: a worker dequeueing an expired envelope answers it with a typed
+    ``deadline_expired`` error instead of burning a kernel launch on a
+    response nobody is waiting for. Both trailing fields are optional —
+    :func:`envelope_times` accepts legacy 5-tuples.
+
+    Example::
+
+        env = make_envelope(0, 7, 0, 1, TopKRequest([3]), deadline=1e12)
+        envelope_times(env)[1] == 1e12   # True
+    """
+    return (client_id, request_id, part, parts, request, t_submit, deadline)
+
+
+def envelope_times(envelope) -> tuple[float | None, float | None]:
+    """``(t_submit, deadline)`` of a wire envelope; short (legacy,
+    hand-built) tuples yield ``(None, None)`` — both features degrade to
+    "not measured" / "no deadline" rather than failing."""
+    t_submit = envelope[5] if len(envelope) > 5 else None
+    deadline = envelope[6] if len(envelope) > 6 else None
+    return t_submit, deadline
+
+
 def check_request_types(requests) -> None:
     """Raise TypeError unless every element is one of the request types."""
     for r in requests:

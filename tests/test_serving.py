@@ -413,14 +413,17 @@ def test_server_counts_lost_workers_not_silent(store_path):
     """Satellite: a worker that dies without a final snapshot must be
     *counted*, not silently dropped from the stats — its last periodic
     snapshot stands in for its traffic. Routed mode: each worker owns its
-    own request queue, so killing one never wedges the survivor."""
+    own request queue, so killing one never wedges the survivor.
+    ``max_respawns=0`` pins supervision off so the death stays a loss —
+    with a respawn budget the replacement would report a final snapshot
+    and the slot would not count as lost."""
     import os as _os
     import signal as _signal
     import time as _time
 
     with CoocServer(
         store_path, workers=2, batch_window_ms=1.0,
-        routing=True, stats_interval_s=0.05,
+        routing=True, stats_interval_s=0.05, max_respawns=0,
     ) as server:
         client = server.client()
         for _ in range(10):

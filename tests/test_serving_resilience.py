@@ -1,0 +1,329 @@
+"""Fault-tolerant serving: worker supervision (typed ``WorkerDied`` with no
+60s hangs, respawn with the queue intact), admission control
+(``ServerOverloaded`` shedding, deadline propagation), client retries, and
+the shutdown/sentinel regressions — all driven through the env-gated
+failpoints of ``repro.runtime.faultinject``."""
+
+import os
+import pickle
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.cooc import count_to_store
+from repro.data.corpus import synthetic_zipf_collection
+from repro.runtime import faultinject
+from repro.store import (
+    CoocServer,
+    ServerOverloaded,
+    TopKRequest,
+    WorkerDied,
+)
+from repro.store.requests import envelope_times, make_envelope
+from repro.store.serving import _STOP, _is_stop, backoff_delay
+
+
+@pytest.fixture(scope="module")
+def coll():
+    return synthetic_zipf_collection(150, vocab=128, mean_len=12, seed=7)
+
+
+@pytest.fixture(scope="module")
+def store_path(coll, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("resilience") / "store")
+    count_to_store("list-scan", coll, path)
+    return path
+
+
+@pytest.fixture
+def faults(monkeypatch):
+    """Arm a REPRO_FAULTS schedule for the workers this test spawns; the
+    monkeypatch teardown disarms it before the next test."""
+
+    def arm(spec: str) -> None:
+        monkeypatch.setenv(faultinject.ENV_VAR, spec)
+
+    return arm
+
+
+# --------------------------------------------------------------- failpoints
+def test_fault_registry_parsing_and_scoping():
+    fr = faultinject.FaultRegistry(
+        "kill-worker=1:3; stall-queue=*:0.5:2 ;drop-response=4"
+    )
+    assert fr and fr.active("kill-worker")
+    assert not fr.active("nope")
+    # worker scope: armed for wid 1 only
+    assert not fr.kill_worker(worker=0, batches_done=99)
+    assert not fr.kill_worker(worker=1, batches_done=2)
+    assert fr.kill_worker(worker=1, batches_done=3)
+    # * scope + stall budget of 2
+    assert fr.stall_queue(worker=7) == 0.5
+    assert fr.stall_queue(worker=7) == 0.5
+    assert fr.stall_queue(worker=7) == 0.0
+    # unscoped drop budget of 4, per-worker hit counters
+    assert sum(fr.drop_response(worker=0) for _ in range(10)) == 4
+    assert sum(fr.drop_response(worker=1) for _ in range(10)) == 4
+
+
+def test_fault_registry_drop_skip():
+    fr = faultinject.FaultRegistry("drop-response=0:2:1")
+    # skip 1, drop 2, pass the rest
+    assert [fr.drop_response(worker=0) for _ in range(5)] == [
+        False, True, True, False, False,
+    ]
+
+
+def test_fault_registry_disarmed(monkeypatch):
+    monkeypatch.delenv(faultinject.ENV_VAR, raising=False)
+    fr = faultinject.from_env()
+    assert not fr
+    assert not fr.active("kill-worker")
+    assert fr.stall_queue(worker=0) == 0.0
+
+
+def test_backoff_delay_jitter_bounds():
+    for attempt in range(6):
+        lo = backoff_delay(attempt, base_ms=40, rng=lambda: 0.0)
+        hi = backoff_delay(attempt, base_ms=40, rng=lambda: 1.0)
+        assert lo == pytest.approx(0.5 * hi)
+        assert hi == pytest.approx(min(40 * 2 ** attempt, 2000) / 1e3)
+    # the cap keeps a long retry storm bounded
+    assert backoff_delay(30, base_ms=40, rng=lambda: 1.0) == 2.0
+
+
+# ------------------------------------------------------------ wire envelope
+def test_envelope_deadline_roundtrip():
+    env = make_envelope(3, 7, 0, 2, TopKRequest([1]), t_submit=5.0, deadline=9.0)
+    assert envelope_times(env) == (5.0, 9.0)
+    # legacy short envelopes: no deadline, no submit stamp
+    assert envelope_times((3, 7, 0, 2, TopKRequest([1]))) == (None, None)
+
+
+# ------------------------------------------------------- sentinel satellite
+def test_stop_sentinel_is_not_none_and_survives_pickle():
+    """mp queues pickle items: the sentinel must be detectable after a
+    round-trip, and a stray ``None`` (the old sentinel) must not stop a
+    worker."""
+    assert not _is_stop(None)
+    assert _is_stop(_STOP)
+    assert _is_stop(pickle.loads(pickle.dumps(_STOP)))
+
+
+def test_stray_none_on_queue_does_not_stop_worker(store_path):
+    with CoocServer(store_path, workers=1, batch_window_ms=0.5) as server:
+        client = server.client()
+        ids, _ = client.topk([3], k=4)
+        # the respawn-race artefact: a bare None lands on the request queue
+        server._request_qs[0].put(None)
+        time.sleep(0.2)
+        ids2, _ = client.topk([3], k=4, timeout=15.0)  # worker still alive
+        np.testing.assert_array_equal(ids, ids2)
+    assert server.stats()["workers_lost"] == 0
+
+
+# ---------------------------------------------------------- worker death
+def test_worker_died_mid_execute_is_typed_and_fast(store_path, faults):
+    """A SIGKILL'd worker's in-flight request fails back as WorkerDied in
+    supervisor time, not at the 60s client timeout."""
+    faults("kill-worker=0")  # die at the first claimed batch
+    with CoocServer(store_path, workers=1, batch_window_ms=0.5,
+                    max_respawns=0) as server:
+        client = server.client()
+        t0 = time.monotonic()
+        with pytest.raises(WorkerDied):
+            client.topk([3], k=4)  # default timeout=60: must not be reached
+        elapsed = time.monotonic() - t0
+        assert elapsed < 20, f"WorkerDied took {elapsed:.1f}s (hang?)"
+        time.sleep(0.2)  # let the supervisor finish marking the slot dead
+        # respawn budget 0: the fleet is gone, submits fail fast and typed
+        with pytest.raises(WorkerDied):
+            client.topk([3], k=4)
+    assert server.stats()["resilience"]["worker_died_failures"] >= 1
+
+
+def test_worker_died_respawn_and_retry_succeed(store_path, faults):
+    """kill-worker fires on every incarnation of worker 0, so the slot dies
+    after every other batch; with a respawn budget and client retries every
+    request still completes — the queue survives the respawn."""
+    faults("kill-worker=0:2")
+    with CoocServer(store_path, workers=2, routing=True,
+                    batch_window_ms=0.5, max_respawns=2) as server:
+        client = server.client()
+        direct = None
+        for _ in range(20):
+            ids, scores = client.execute(
+                [TopKRequest(np.arange(16), k=4)], timeout=30.0, retries=4,
+            )[0]
+            if direct is None:
+                direct = (ids.copy(), scores.copy())
+            np.testing.assert_array_equal(ids, direct[0])
+    stats = server.stats()
+    assert stats["resilience"]["respawns"] >= 1
+    # every kill stranded at least its claimed batch
+    assert stats["resilience"]["worker_died_failures"] >= 1
+
+
+def test_worker_died_mid_stream_iterator_raises_promptly(store_path, faults):
+    """The hard case: a stream whose first chunk arrived and whose tail was
+    lost (drop-response), then the worker dies on its next batch. The
+    supervisor fails the still-claimed stream tag, so the iterator raises
+    WorkerDied on the next ``next()`` instead of stalling — and the
+    client's buffers are drained via ``_forget``."""
+    # batch 1 = the stream: claim flows, chunk 0 passes, chunks 1-2 dropped;
+    # batch 2 = the probe request: claimed, then the worker dies
+    faults("kill-worker=0:1;drop-response=0:2:1")
+    with CoocServer(store_path, workers=1, batch_window_ms=0.5,
+                    max_respawns=0) as server:
+        client = server.client()
+        it = client.topk_stream([3], k=96, chunk=32, timeout=30.0)
+        ids0, scores0 = next(it)  # chunk 0 made it through
+        assert ids0.shape == (1, 32)
+        # the probe's batch triggers the kill; its own failure is typed too
+        t0 = time.monotonic()
+        with pytest.raises(WorkerDied):
+            client.topk([5], k=4, timeout=60.0)
+        with pytest.raises(WorkerDied):
+            next(it)  # supervisor failed the claimed stream tag
+        assert time.monotonic() - t0 < 20
+        # _forget ran: nothing keeps buffering for the dead request ids
+        assert not client._msgs
+    assert server.stats()["resilience"]["worker_died_failures"] >= 2
+
+
+# ------------------------------------------------------- admission control
+def test_overload_sheds_typed_and_counts(store_path, faults):
+    """A stalled worker with a bounded queue sheds excess load as
+    ServerOverloaded at submit — typed, counted, never a silent drop."""
+    faults("stall-queue=1.0:5")
+    with CoocServer(store_path, workers=1, batch_window_ms=0.0,
+                    max_inflight=2, max_respawns=0) as server:
+        shed = []
+        served = []
+
+        def hammer():
+            c = server.client()
+            for _ in range(8):
+                try:
+                    c.topk([3], k=4, timeout=30.0)
+                    served.append(1)
+                except ServerOverloaded:
+                    shed.append(1)
+
+        threads = [threading.Thread(target=hammer) for _ in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stats = server.stats()
+        assert shed, "bounded queue never shed under a 1s stall"
+        assert served, "shedding must not starve everything"
+        assert stats["resilience"]["shed"] == len(shed)
+        assert stats["resilience"]["max_inflight"] == 2
+
+
+def test_overloaded_retry_then_succeed_under_stall(store_path, faults):
+    """Satellite: a shed request retried with jittered backoff lands once
+    the stalled worker drains — the caller sees one successful execute."""
+    faults("stall-queue=1.0:1")
+    with CoocServer(store_path, workers=1, batch_window_ms=0.0,
+                    max_inflight=2, max_respawns=0) as server:
+        # one request in service (pinned behind the stall), two more filling
+        # the bounded queue — each from its own client thread
+        def fill(c):  # a filler may race another into a shed: keep pushing
+            for _ in range(100):
+                try:
+                    c.topk([1], k=4, timeout=30.0)
+                    return
+                except ServerOverloaded:
+                    time.sleep(0.05)
+
+        fillers = []
+        for _ in range(3):
+            th = threading.Thread(target=fill, args=(server.client(),))
+            th.start()
+            fillers.append(th)
+        client = server.client()
+        deadline = time.monotonic() + 10
+        saw_shed = False
+        while time.monotonic() < deadline:  # wait for the queue to be full
+            try:
+                client.execute([TopKRequest([2], k=4)], timeout=30.0)
+            except ServerOverloaded:
+                saw_shed = True
+                break
+            time.sleep(0.02)
+        assert saw_shed, "bounded queue never filled behind the stall"
+        # same request, now with retries: a backed-off attempt lands after
+        # the ~1s stall drains the queue
+        (ids, scores), = client.execute(
+            [TopKRequest([2], k=4)], timeout=30.0,
+            retries=10, retry_backoff_ms=100.0,
+        )
+        assert ids.shape == (1, 4)
+        for th in fillers:
+            th.join()
+        assert server.stats()["resilience"]["shed"] >= 1
+
+
+def test_deadline_expired_skip_is_counted(store_path, faults):
+    """Requests whose client gave up before a worker dequeued them are
+    answered with a typed expiry (client-side: TimeoutError), not executed
+    — and counted as serving/deadline_expired."""
+    faults("stall-queue=0.8:1")
+    with CoocServer(store_path, workers=1, batch_window_ms=0.0,
+                    max_respawns=0) as server:
+        timeouts = []
+
+        def call():
+            c = server.client()
+            try:
+                c.topk([3], k=4, timeout=0.2)
+            except TimeoutError:
+                timeouts.append(1)
+
+        threads = [threading.Thread(target=call) for _ in range(5)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert timeouts  # the stall outlived every client deadline
+        time.sleep(1.2)  # let the stalled worker drain the expired backlog
+    final = server.stats()
+    assert final["resilience"]["deadline_expired"] >= 1
+
+
+# ----------------------------------------------------------- stop satellite
+def test_stop_returns_fast_when_workers_die_with_backlog(store_path, faults):
+    """Satellite regression: a worker that dies before its final snapshot
+    while its queue pipe still holds data used to pin ``stop()`` against
+    the full 120s timeout (the dead-worker check only ran when the stats
+    pipe went quiet, and periodic snapshots kept it noisy). stop() must
+    now return in supervisor time."""
+    faults("stall-queue=30:1")  # pin both workers so a backlog builds
+    with CoocServer(store_path, workers=2, routing=True,
+                    batch_window_ms=0.5, stats_interval_s=0.05,
+                    max_respawns=0) as server:
+
+        def call():  # backlog nobody will serve; typed failure or timeout
+            c = server.client()
+            try:
+                c.topk(np.arange(8), k=4, timeout=25.0)
+            except (WorkerDied, TimeoutError):
+                pass
+
+        for _ in range(6):
+            th = threading.Thread(target=call)
+            th.daemon = True
+            th.start()
+        time.sleep(1.0)  # workers are stalled with envelopes behind them
+        for p in server._procs:
+            os.kill(p.pid, signal.SIGKILL)
+        t0 = time.monotonic()
+        stats = server.stop(timeout=120.0)
+        elapsed = time.monotonic() - t0
+    assert elapsed < 15, f"stop() took {elapsed:.1f}s with dead workers"
+    assert stats["workers_lost"] >= 1
